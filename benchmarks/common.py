@@ -1,0 +1,174 @@
+"""Shared benchmark harness: builds (and caches) TAHOMA systems for K
+synthetic predicates at reduced scale. The cache stores only the
+*evaluation state* (scores, thresholds, measured costs) — everything the
+cascade evaluator needs — so repeated benchmark runs skip CNN training.
+"""
+from __future__ import annotations
+
+import sys
+import time
+from dataclasses import dataclass
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.configs.base import TahomaCNNConfig                   # noqa: E402
+from repro.core.cascade import evaluate_cascades                 # noqa: E402
+from repro.core.costs import CostProfile                         # noqa: E402
+from repro.core.thresholds import PRECISION_TARGETS, compute_thresholds_batch  # noqa: E402
+from repro.core.transforms import Representation, representation_space  # noqa: E402
+from repro.data.synthetic import DEFAULT_PREDICATES, make_corpus, three_way_split  # noqa: E402
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
+ART.mkdir(parents=True, exist_ok=True)
+
+BASE_HW = 32
+RESOLUTIONS = (8, 16, 32)
+ARCHS = [TahomaCNNConfig(l, c, 16) for l in (1, 2) for c in (8, 16)]
+STEPS = 150
+N_IMAGES = 480
+
+
+# Deployment-regime calibration (EXPERIMENTS.md §Paper-claims):
+# the reduced 32px stand-in corpus is priced at the paper's 224px regime
+# (byte costs x (224/32)^2) with v5e analytic inference. Tiny convs run
+# far below MXU peak; trusted stands in for fine-tuned ResNet50 and is
+# priced at its published 3.9 GFLOPs/image.
+COST_SCALE = (224 / BASE_HW) ** 2
+MXU_EFF = 0.2
+TPU_PEAK = 197e12
+INFER_OVERHEAD_S = 1e-6
+RESNET50_FLOPS = 3.9e9
+
+
+def analytic_infer_s(flops: float) -> float:
+    return INFER_OVERHEAD_S + flops * COST_SCALE / (TPU_PEAK * MXU_EFF)
+
+
+@dataclass
+class EvalState:
+    """Minimal state for cascade evaluation under any scenario."""
+    names: list
+    reps: list                    # list[Representation]
+    trusted: int
+    eval_scores: np.ndarray
+    eval_truth: np.ndarray
+    p_low: np.ndarray
+    p_high: np.ndarray
+    infer_s: np.ndarray
+    base_hw: int
+
+    def profile(self, reps=None) -> CostProfile:
+        return CostProfile.modeled(
+            dict(zip(self.names, self.infer_s)),
+            list(set(reps if reps is not None else self.reps)),
+            self.base_hw, scale=COST_SCALE)
+
+    def subset(self, rep_filter) -> "EvalState":
+        """Restrict the MODEL POOL (all cascade positions) to reps passing
+        the filter (+ the trusted model) — paper §VII-D subsets."""
+        keep = [i for i, r in enumerate(self.reps)
+                if rep_filter(r) or i == self.trusted]
+        import dataclasses
+        return dataclasses.replace(
+            self, names=[self.names[i] for i in keep],
+            reps=[self.reps[i] for i in keep],
+            trusted=keep.index(self.trusted),
+            eval_scores=self.eval_scores[keep],
+            p_low=self.p_low[keep], p_high=self.p_high[keep],
+            infer_s=self.infer_s[keep])
+
+    def space(self, scenario: str, *, max_level: int = 3,
+              first_level_models=None, rep_filter=None):
+        st = self if rep_filter is None else self.subset(rep_filter)
+        return evaluate_cascades(
+            st.eval_scores, st.eval_truth, st.p_low, st.p_high,
+            st.reps, st.infer_s, st.profile(), scenario,
+            st.trusted, max_level=max_level,
+            first_level_models=first_level_models)
+
+
+def _cache_path(pred_name: str) -> Path:
+    return ART / f"state_v2_{pred_name}.npz"
+
+
+def _analytic_from_name(name: str) -> float:
+    """Names encode the arch: cnn_l{L}_c{C}_d{D}_{res}x{res}_{color}."""
+    from repro.models.cnn import cnn_flops
+    if name.startswith("trusted"):
+        return analytic_infer_s(RESNET50_FLOPS / COST_SCALE)
+    parts = name.split("_")
+    l, c, d = (int(parts[1][1:]), int(parts[2][1:]), int(parts[3][1:]))
+    res = int(parts[4].split("x")[0])
+    ch = 3 if parts[5] == "rgb" else 1
+    return analytic_infer_s(cnn_flops(TahomaCNNConfig(
+        l, c, d, input_hw=res, input_channels=ch)))
+
+
+def build_state(pred, *, force: bool = False, log=print) -> EvalState:
+    path = _cache_path(pred.name)
+    old = ART / f"state_{pred.name}.npz"
+    if not path.exists() and old.exists() and not force:
+        z = np.load(old, allow_pickle=True)   # migrate v1 -> v2 pricing
+        np.savez(path, **{k: z[k] for k in z.files if k != "infer_s"},
+                 infer_s=np.array([_analytic_from_name(str(n))
+                                   for n in z["names"]]))
+    if path.exists() and not force:
+        z = np.load(path, allow_pickle=True)
+        reps = [Representation(int(r), str(c))
+                for r, c in zip(z["rep_res"], z["rep_color"])]
+        return EvalState(list(z["names"]), reps, int(z["trusted"]),
+                         z["eval_scores"], z["eval_truth"], z["p_low"],
+                         z["p_high"], z["infer_s"], int(z["base_hw"]))
+    from repro.core.pipeline import initialize_system
+    from repro.models.cnn import cnn_flops
+    log(f"[bench] training model grid for predicate '{pred.name}' ...")
+    x, y = make_corpus(pred, N_IMAGES, hw=BASE_HW, seed=0)
+    splits = three_way_split(x, y, seed=1)
+    reps = representation_space(RESOLUTIONS)
+    t0 = time.time()
+    sys_ = initialize_system(*splits, ARCHS, reps, steps=STEPS)
+    log(f"[bench] trained {len(sys_.bank.entries)} models in "
+        f"{time.time() - t0:.0f}s")
+    infer = np.array([
+        analytic_infer_s(RESNET50_FLOPS / COST_SCALE) if e.trusted
+        else analytic_infer_s(cnn_flops(e.arch))
+        for e in sys_.bank.entries])
+    st = EvalState(
+        names=sys_.bank.names, reps=sys_.bank.reps,
+        trusted=sys_.bank.trusted_index, eval_scores=sys_.eval_scores,
+        eval_truth=sys_.eval_truth, p_low=sys_.p_low, p_high=sys_.p_high,
+        infer_s=infer, base_hw=BASE_HW)
+    np.savez(path, names=np.array(st.names),
+             rep_res=np.array([r.resolution for r in st.reps]),
+             rep_color=np.array([r.color for r in st.reps]),
+             trusted=st.trusted, eval_scores=st.eval_scores,
+             eval_truth=st.eval_truth, p_low=st.p_low, p_high=st.p_high,
+             infer_s=st.infer_s, base_hw=st.base_hw)
+    return st
+
+
+def get_states(n_predicates: int = 3, force: bool = False,
+               log=print) -> dict[str, EvalState]:
+    return {p.name: build_state(p, force=force, log=log)
+            for p in DEFAULT_PREDICATES[:n_predicates]}
+
+
+class Csv:
+    """Collects ``name,us_per_call,derived`` rows (benchmarks/run.py
+    contract) and pretty-prints."""
+
+    def __init__(self):
+        self.rows = []
+
+    def add(self, name: str, us_per_call: float, derived: str):
+        self.rows.append((name, us_per_call, derived))
+        print(f"{name},{us_per_call:.2f},{derived}")
+
+    def write(self, path: Path):
+        with open(path, "w") as f:
+            f.write("name,us_per_call,derived\n")
+            for n, u, d in self.rows:
+                f.write(f"{n},{u:.2f},{d}\n")

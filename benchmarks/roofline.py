@@ -1,0 +1,107 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads artifacts/dryrun/*.json and renders the per-(arch x shape x mesh)
+three-term roofline with the dominant bottleneck, MODEL_FLOPS ratio, and
+skip annotations. ``--markdown`` writes EXPERIMENTS.md §Roofline's table.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load(variant: str = "") -> list[dict]:
+    rows = []
+    for f in sorted(ART.glob("*.json")):
+        d = json.loads(f.read_text())
+        if d.get("variant", "") == variant:
+            rows.append(d)
+    return rows
+
+
+def fmt_row(d: dict) -> dict:
+    if d["status"] != "ok":
+        return {"arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+                "status": d["status"],
+                "note": d.get("reason", d.get("error", ""))[:60]}
+    t = d["roofline_terms_s"]
+    return {
+        "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+        "status": "ok",
+        "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+        "collective_s": t["collective_s"], "dominant":
+            d["dominant"].replace("_s", ""),
+        "useful": d["useful_flops_ratio"],
+        "frac": d["roofline_fraction"],
+        "bound_s": d["step_time_bound_s"],
+    }
+
+
+def render(rows, markdown: bool = False) -> str:
+    hdr = ["arch", "shape", "mesh", "compute_s", "memory_s",
+           "collective_s", "dominant", "useful", "roofline_frac"]
+    lines = []
+    if markdown:
+        lines.append("| " + " | ".join(hdr) + " |")
+        lines.append("|" + "---|" * len(hdr))
+    else:
+        lines.append(f"{'arch':22s} {'shape':12s} {'mesh':6s} "
+                     f"{'compute_s':>10s} {'memory_s':>10s} "
+                     f"{'collect_s':>10s} {'dom':>10s} {'useful':>7s} "
+                     f"{'frac':>8s}")
+    for d in rows:
+        r = fmt_row(d)
+        if r["status"] != "ok":
+            cells = [r["arch"], r["shape"], r["mesh"], "-", "-", "-",
+                     r["status"], "-", r.get("note", "")]
+        else:
+            cells = [r["arch"], r["shape"], r["mesh"],
+                     f"{r['compute_s']:.3g}", f"{r['memory_s']:.3g}",
+                     f"{r['collective_s']:.3g}", r["dominant"],
+                     f"{r['useful']:.2f}", f"{r['frac']:.4f}"]
+        if markdown:
+            lines.append("| " + " | ".join(str(c) for c in cells) + " |")
+        else:
+            lines.append(f"{cells[0]:22s} {cells[1]:12s} {cells[2]:6s} "
+                         f"{cells[3]:>10s} {cells[4]:>10s} {cells[5]:>10s} "
+                         f"{cells[6]:>10s} {cells[7]:>7s} {cells[8]:>8s}")
+    return "\n".join(lines)
+
+
+def bench_roofline(csv=None):
+    rows = load()
+    singles = [r for r in rows if r["mesh"] == "single"]
+    ok = [r for r in singles if r["status"] == "ok"]
+    print(render(singles))
+    if csv is not None and ok:
+        import numpy as np
+        worst = min(ok, key=lambda r: r["roofline_fraction"])
+        csv.add("roofline_cells_ok", 0.0,
+                f"{len(ok)}/{len(singles)} single-pod cells ok "
+                f"(+{len(rows)-len(singles)} multi-pod)")
+        csv.add("roofline_worst_cell", 0.0,
+                f"{worst['arch']}x{worst['shape']} "
+                f"frac={worst['roofline_fraction']:.5f} "
+                f"dom={worst['dominant']}")
+        csv.add("roofline_median_frac", 0.0,
+                f"{np.median([r['roofline_fraction'] for r in ok]):.4f}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--variant", default="")
+    ap.add_argument("--mesh", default="")
+    args = ap.parse_args()
+    rows = load(args.variant)
+    if args.mesh:
+        rows = [r for r in rows if r["mesh"] == args.mesh]
+    print(render(rows, markdown=args.markdown))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Benchmark entry point — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (and writes artifacts/bench/).
+
+  PYTHONPATH=src python -m benchmarks.run [--predicates 3] [--force]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--predicates", type=int, default=10,
+                    help="number of binary predicates (paper: 10); grids "
+                         "are trained on first use and cached under "
+                         "artifacts/bench/")
+    ap.add_argument("--force", action="store_true",
+                    help="retrain model grids (ignore cache)")
+    args = ap.parse_args()
+
+    from benchmarks import paper_tables, roofline
+    from benchmarks.common import ART, Csv, get_states
+
+    csv = Csv()
+    print("name,us_per_call,derived")
+    states = get_states(args.predicates, force=args.force)
+    paper_tables.bench_speedups(states, csv)
+    paper_tables.bench_scenarios(states, csv)
+    paper_tables.bench_transforms(states, csv)
+    paper_tables.bench_depth(states, csv)
+    paper_tables.bench_fig8_frontier_shift(states, csv)
+    paper_tables.bench_cascade_space(states, csv)
+    paper_tables.bench_eval_speed(csv)
+    paper_tables.bench_executor(csv)
+    paper_tables.bench_transform_kernel(csv)
+    roofline.bench_roofline(csv)
+    csv.write(ART / "results.csv")
+    print(f"\nwrote {ART / 'results.csv'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.configs.base import (  # noqa: F401
+    ArchConfig, EncoderConfig, MLAConfig, MoEConfig, SSMConfig, ShapeConfig,
+    TahomaCNNConfig, VisionConfig,
+)

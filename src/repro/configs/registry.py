@@ -1,0 +1,72 @@
+"""--arch <id> registry over the 10 assigned architectures.
+
+Also provides reduced ("smoke") variants of every arch: same family and
+block structure, tiny widths/depths, so one forward/train step runs on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ArchConfig, EncoderConfig, MLAConfig, MoEConfig, SSMConfig, VisionConfig
+from repro.configs import (
+    whisper_tiny, mamba2_130m, granite_20b, deepseek_7b, qwen2_5_32b,
+    minitron_4b, deepseek_v2_236b, phi3_5_moe, qwen2_vl_72b, zamba2_1_2b,
+)
+
+ARCHS: dict[str, ArchConfig] = {
+    c.name: c
+    for c in (
+        whisper_tiny.CONFIG,
+        mamba2_130m.CONFIG,
+        granite_20b.CONFIG,
+        deepseek_7b.CONFIG,
+        qwen2_5_32b.CONFIG,
+        minitron_4b.CONFIG,
+        deepseek_v2_236b.CONFIG,
+        phi3_5_moe.CONFIG,
+        qwen2_vl_72b.CONFIG,
+        zamba2_1_2b.CONFIG,
+    )
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown --arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def smoke_config(name: str) -> ArchConfig:
+    """Reduced config of the same family for CPU smoke tests."""
+    c = get_arch(name)
+    kw: dict = dict(
+        n_layers=2, d_model=64, vocab_size=503,  # odd vocab exercises padding
+        max_seq_len=256,
+    )
+    if c.uses_attention:
+        kw.update(n_heads=4, n_kv_heads=min(c.n_kv_heads, 2) or 2, head_dim=16,
+                  d_ff=128)
+    if c.moe is not None:
+        kw["moe"] = MoEConfig(
+            num_experts=4, top_k=2, d_ff_expert=32,
+            num_shared_experts=c.moe.num_shared_experts,
+            d_ff_shared=32 if c.moe.num_shared_experts else 0)
+        kw["d_ff"] = 32
+    if c.mla is not None:
+        kw["mla"] = MLAConfig(q_lora_rank=32, kv_lora_rank=16,
+                              qk_nope_head_dim=16, qk_rope_head_dim=8,
+                              v_head_dim=16)
+        kw["head_dim"] = 16
+    if c.ssm is not None:
+        kw["ssm"] = SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=16,
+                              n_groups=1, chunk_size=32)
+        if c.family == "ssm":
+            kw.pop("n_heads", None)
+    if c.encoder is not None:
+        kw["encoder"] = EncoderConfig(n_layers=2, n_frames=32)
+    if c.vision is not None:
+        kw["vision"] = VisionConfig(n_patches=8, mrope_sections=(2, 3, 3))
+    if c.hybrid_attn_every:
+        kw["n_layers"] = 4
+        kw["hybrid_attn_every"] = 2
+    return dataclasses.replace(c, **kw)

@@ -1,0 +1,244 @@
+"""Cascade construction + evaluation (paper §V-D/E).
+
+The paper's key evaluation trick: inference runs ONCE per model over the
+eval split; every cascade is then *simulated* from the cached score matrix.
+We push this further than the paper's per-cascade loop: because decision
+thresholds are per-model (independent of cascade context, §V-C), cascade
+accuracy/cost decompose into per-model sums and pairwise inner products
+over images — so evaluating ALL 1/2/3-level cascades is a handful of
+(A x I) @ (I x B) matmuls (TPU/BLAS-native; DESIGN.md §3). The paper
+evaluates 1.3M cascades in ~1 minute; this path does it in seconds
+(benchmarks/bench_eval_speed.py) and is property-tested against a naive
+per-image simulator (simulate_cascade).
+
+Cascade semantics (Def. 7): image flows through levels; level l's output o
+is accepted iff o <= p_low or o >= p_high (label = o >= p_high); the final
+level's label is o >= 0.5 unconditionally.
+
+Cost semantics (§VI + §VII-A3): expected seconds/image =
+  sum_l P(reach l) * [infer_s(l) + rep-handling of level-l's representation
+                      if not already materialized by an earlier level]
+with rep handling priced by the deployment scenario (core/costs.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.costs import CostProfile, rep_cost_s
+from repro.core.transforms import Representation
+
+KIND_SINGLE, KIND_TWO, KIND_THREE = 0, 1, 2
+
+
+@dataclass
+class CascadeSpace:
+    """Flat arrays over all enumerated cascades."""
+    acc: np.ndarray          # (N,)
+    time_s: np.ndarray       # (N,) expected seconds/image
+    kind: np.ndarray         # (N,) 0/1/2
+    i1: np.ndarray           # (N,) level-1: configured idx (kinds 1,2) or model idx (kind 0)
+    i2: np.ndarray           # (N,) level-2: model idx (kind 1) / configured idx (kind 2)
+    n_targets: int
+    trusted: int
+
+    @property
+    def throughput(self) -> np.ndarray:
+        return 1.0 / self.time_s
+
+    def __len__(self):
+        return len(self.acc)
+
+    def describe(self, i: int, model_names: Sequence[str],
+                 targets: Sequence[float]) -> str:
+        k = self.kind[i]
+        def cfg(a):
+            return (f"{model_names[a // self.n_targets]}"
+                    f"@p{targets[a % self.n_targets]}")
+        if k == KIND_SINGLE:
+            return model_names[self.i1[i]]
+        if k == KIND_TWO:
+            return f"{cfg(self.i1[i])} -> {model_names[self.i2[i]]}"
+        return (f"{cfg(self.i1[i])} -> {cfg(self.i2[i])} -> "
+                f"{model_names[self.trusted]}")
+
+
+def _level_cost_matrix(reps: list[Representation], infer_s, profile,
+                       scenario: str):
+    """first_cost[m]: level-1 cost of model m (rep + infer).
+    follow_cost[m]: rep+infer of m when it appears at level>=2 and its rep
+    is NOT yet materialized. same_rep[m1, m2]: rep identity mask."""
+    m = len(reps)
+    first = np.array([rep_cost_s(profile, reps[i], scenario, True)
+                      + infer_s[i] for i in range(m)])
+    follow_rep = np.array([rep_cost_s(profile, reps[i], scenario, False)
+                           for i in range(m)])
+    same = np.array([[reps[i] == reps[j] for j in range(m)]
+                     for i in range(m)])
+    return first, follow_rep, same
+
+
+def evaluate_cascades(scores_eval, truth, p_low, p_high,
+                      reps: list[Representation], infer_s,
+                      profile: CostProfile, scenario: str,
+                      trusted: int, *, max_level: int = 3,
+                      first_level_models=None) -> CascadeSpace:
+    """scores_eval (M, I); p_low/p_high (M, T); infer_s (M,).
+    trusted: model index used as the forced final level of 3-level
+    cascades (the paper's ResNet50 slot)."""
+    s = np.asarray(scores_eval, np.float32)
+    y = np.asarray(truth, bool)
+    m_models, n_img = s.shape
+    p_low = np.asarray(p_low)
+    p_high = np.asarray(p_high)
+    n_t = p_low.shape[1]
+    infer_s = np.asarray(infer_s, np.float64)
+    first_c, follow_rep_c, same_rep = _level_cost_matrix(
+        reps, infer_s, profile, scenario)
+
+    # per-configured-model certainty/correctness over images
+    shi = s[:, None, :] >= p_high[:, :, None]          # (M,T,I)
+    slo = s[:, None, :] <= p_low[:, :, None]
+    cert = (shi | slo)
+    corr_cert = cert & (shi == y[None, None, :])
+    a_dim = m_models * n_t
+    c = cert.reshape(a_dim, n_img).astype(np.float32)           # (A,I)
+    v = corr_cert.reshape(a_dim, n_img).astype(np.float32)      # (A,I)
+    cc_sum = v.sum(1)                                           # (A,)
+    p_cert = c.mean(1)
+    corr_final = ((s >= 0.5) == y[None, :]).astype(np.float32)  # (M,I)
+    cf_sum = corr_final.sum(1)
+
+    cfg_model = np.repeat(np.arange(m_models), n_t)             # (A,)
+    first_models = (np.arange(m_models) if first_level_models is None
+                    else np.asarray(first_level_models))
+
+    out_acc, out_t, out_kind, out_i1, out_i2 = [], [], [], [], []
+
+    # ---- 1-level: every base model alone
+    out_acc.append(cf_sum / n_img)
+    out_t.append(first_c.copy())
+    out_kind.append(np.full(m_models, KIND_SINGLE))
+    out_i1.append(np.arange(m_models))
+    out_i2.append(np.full(m_models, -1))
+
+    if max_level >= 2:
+        # ---- 2-level: configured a -> final b (all models)
+        a_idx = (first_models[:, None] * n_t
+                 + np.arange(n_t)[None, :]).ravel()             # (A2,)
+        c_a = c[a_idx]
+        acc = (cc_sum[a_idx][:, None] + cf_sum[None, :]
+               - c_a @ corr_final.T) / n_img                    # (A2,M)
+        p_unc = 1.0 - p_cert[a_idx]
+        rep_extra = np.where(same_rep[cfg_model[a_idx]], 0.0,
+                             follow_rep_c[None, :])
+        t = (first_c[cfg_model[a_idx]][:, None]
+             + p_unc[:, None] * (infer_s[None, :] + rep_extra))
+        a2, mm = acc.shape
+        out_acc.append(acc.ravel())
+        out_t.append(t.ravel())
+        out_kind.append(np.full(a2 * mm, KIND_TWO))
+        out_i1.append(np.repeat(a_idx, mm))
+        out_i2.append(np.tile(np.arange(m_models), a2))
+
+    if max_level >= 3:
+        # ---- 3-level: configured a -> configured b -> trusted
+        a_idx = (first_models[:, None] * n_t
+                 + np.arange(n_t)[None, :]).ravel()
+        b_idx = np.arange(a_dim)
+        c_a, c_b = c[a_idx], c
+        corr_t = corr_final[trusted]
+        ct_sum = corr_t.sum()
+        term2 = cc_sum[None, :] - c_a @ v.T                     # (A,B)
+        cab = c_a @ c_b.T
+        cab_t = (c_a * corr_t[None, :]) @ c_b.T
+        sum_ca_t = c_a @ corr_t
+        sum_cb_t = c_b @ corr_t
+        term3 = (ct_sum - sum_ca_t[:, None] - sum_cb_t[None, :] + cab_t)
+        acc = (cc_sum[a_idx][:, None] + term2 + term3) / n_img
+        p_unc_a = 1.0 - p_cert[a_idx]
+        p_unc_ab = (n_img - c_a.sum(1)[:, None] - c_b.sum(1)[None, :]
+                    + cab) / n_img
+        mb = cfg_model
+        rep_b_extra = np.where(same_rep[cfg_model[a_idx]][:, mb], 0.0,
+                               follow_rep_c[mb][None, :])
+        rep_t_extra = np.where(
+            same_rep[cfg_model[a_idx], trusted][:, None]
+            | same_rep[mb, trusted][None, :], 0.0,
+            rep_cost_s(profile, reps[trusted], scenario, False))
+        t = (first_c[cfg_model[a_idx]][:, None]
+             + p_unc_a[:, None] * (infer_s[mb][None, :] + rep_b_extra)
+             + p_unc_ab * (infer_s[trusted] + rep_t_extra))
+        a3, bdim = acc.shape
+        out_acc.append(acc.ravel())
+        out_t.append(t.ravel())
+        out_kind.append(np.full(a3 * bdim, KIND_THREE))
+        out_i1.append(np.repeat(a_idx, bdim))
+        out_i2.append(np.tile(b_idx, a3))
+
+    return CascadeSpace(
+        acc=np.concatenate(out_acc), time_s=np.concatenate(out_t),
+        kind=np.concatenate(out_kind).astype(np.int8),
+        i1=np.concatenate(out_i1).astype(np.int32),
+        i2=np.concatenate(out_i2).astype(np.int32),
+        n_targets=n_t, trusted=trusted)
+
+
+# ------------------------------------------------------- naive reference ---
+def simulate_cascade(levels, scores_eval, truth):
+    """Per-image reference simulator. levels: list of
+    (model_idx, p_low|None, p_high|None); None thresholds = final level.
+    Returns (accuracy, level_reach_fractions)."""
+    s = np.asarray(scores_eval)
+    y = np.asarray(truth, bool)
+    n = s.shape[1]
+    correct = 0
+    reach = np.zeros(len(levels))
+    for i in range(n):
+        for li, (m, lo, hi) in enumerate(levels):
+            reach[li] += 1
+            o = s[m, i]
+            final = lo is None
+            if final or o <= lo or o >= hi:
+                pred = o >= (0.5 if final else hi)
+                correct += int(pred == y[i])
+                break
+    return correct / n, reach / n
+
+
+def cascade_time_naive(levels, scores_eval, reps, infer_s, profile,
+                       scenario):
+    """Expected per-image cost by explicit per-image walk (reference)."""
+    s = np.asarray(scores_eval)
+    n = s.shape[1]
+    total = 0.0
+    for i in range(n):
+        seen_reps = []
+        for li, (m, lo, hi) in enumerate(levels):
+            if reps[m] not in seen_reps:
+                total += rep_cost_s(profile, reps[m], scenario,
+                                    first_rep=not seen_reps)
+                seen_reps.append(reps[m])
+            total += infer_s[m]
+            o = s[m, i]
+            if lo is None or o <= lo or o >= hi:
+                break
+    return total / n
+
+
+def spec_levels(space: CascadeSpace, i: int, p_low, p_high):
+    """Decode cascade i into the ``levels`` format of simulate_cascade."""
+    k, a, b = space.kind[i], space.i1[i], space.i2[i]
+    nt = space.n_targets
+    if k == KIND_SINGLE:
+        return [(int(a), None, None)]
+    if k == KIND_TWO:
+        m1, t1 = divmod(int(a), nt)
+        return [(m1, p_low[m1, t1], p_high[m1, t1]), (int(b), None, None)]
+    m1, t1 = divmod(int(a), nt)
+    m2, t2 = divmod(int(b), nt)
+    return [(m1, p_low[m1, t1], p_high[m1, t1]),
+            (m2, p_low[m2, t2], p_high[m2, t2]),
+            (space.trusted, None, None)]

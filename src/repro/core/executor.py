@@ -1,0 +1,89 @@
+"""Online batched cascade execution — the TPU-native adaptation of the
+paper's per-image early-exit control flow (DESIGN.md §3).
+
+TPUs want static shapes, so instead of branching per image we run
+two-phase batch compaction per level:
+  1. classify the full (sub-)batch with level l;
+  2. argsort the uncertainty mask, gather the uncertain prefix into a
+     FIXED-CAPACITY sub-batch, run level l+1 on it, scatter results back.
+Capacity per level is a knob calibrated offline (e.g. the p99 uncertain
+fraction measured on I_config); overflow items keep level-l's forced
+decision (o >= 0.5) and are counted in the returned stats.
+
+Everything here is jit-compatible; model_fns[l] maps the level's input
+representation tensor (already transformed) to probabilistic scores.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def run_cascade_batch(images, model_fns: Sequence[Callable],
+                      thresholds: Sequence[tuple[float | None,
+                                                 float | None]],
+                      transforms: Sequence[Callable],
+                      capacities: Sequence[int]):
+    """images: raw batch (B, H, W, 3). Returns (labels (B,), stats).
+    thresholds[l] = (p_low, p_high); final level may be (None, None).
+    capacities[l]: static sub-batch size for level l >= 1."""
+    b = images.shape[0]
+    labels = jnp.zeros((b,), jnp.int32)
+    decided = jnp.zeros((b,), bool)
+    overflow = jnp.zeros((), jnp.int32)
+    levels_used = jnp.zeros((len(model_fns),), jnp.int32)
+
+    # level 0 on the full batch
+    rep0 = transforms[0](images)
+    o = model_fns[0](rep0)
+    lo, hi = thresholds[0]
+    if lo is None:
+        return (o >= 0.5).astype(jnp.int32), {
+            "overflow": overflow,
+            "levels_used": levels_used.at[0].set(b)}
+    certain = (o <= lo) | (o >= hi)
+    labels = jnp.where(o >= hi, 1, 0)
+    forced = (o >= 0.5).astype(jnp.int32)   # fallback if never decided
+    decided = certain
+    levels_used = levels_used.at[0].set(b)
+
+    active_idx = jnp.arange(b)
+    active_mask = ~decided
+    for l in range(1, len(model_fns)):
+        cap = int(capacities[l - 1])
+        # compact: uncertain items first (stable order)
+        order = jnp.argsort(~active_mask, stable=True)
+        take = order[:cap]
+        valid = active_mask[take]
+        overflow = overflow + jnp.sum(active_mask) - jnp.sum(valid)
+        sub = jnp.take(images, take, axis=0)
+        repl = transforms[l](sub)
+        o = model_fns[l](repl)
+        levels_used = levels_used.at[l].set(jnp.sum(valid.astype(jnp.int32)))
+        lo, hi = thresholds[l]
+        final = lo is None
+        if final:
+            sub_decided = valid
+            sub_labels = (o >= 0.5).astype(jnp.int32)
+        else:
+            cert = (o <= lo) | (o >= hi)
+            sub_decided = valid & cert
+            sub_labels = jnp.where(o >= hi, 1, 0)
+        labels = labels.at[take].set(
+            jnp.where(sub_decided, sub_labels, labels[take]))
+        decided = decided.at[take].set(decided[take] | sub_decided)
+        active_mask = active_mask.at[take].set(
+            active_mask[take] & ~sub_decided)
+        if final:
+            break
+    labels = jnp.where(decided, labels, forced)
+    return labels, {"overflow": overflow, "levels_used": levels_used}
+
+
+def calibrate_capacity(uncertain_fraction: float, batch: int,
+                       quantile_margin: float = 1.3) -> int:
+    """Capacity knob: expected uncertain count x a margin, clamped."""
+    return int(min(batch, max(8, round(batch * uncertain_fraction
+                                       * quantile_margin))))

@@ -1,0 +1,187 @@
+"""TAHOMA system initialization (paper Fig. 2): model trainer -> cost
+profiler -> cascade builder -> cascade evaluator, per binary predicate.
+
+Scaled to this container: base resolution and grid sizes come from the
+caller (benchmarks use the reduced grid in configs/tahoma_cnn.py); the
+structure (A x F model grid, three data splits, 5 precision targets,
+per-scenario cost profiles, Pareto selection) is the paper's.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TahomaCNNConfig
+from repro.core import thresholds as thr_mod
+from repro.core.cascade import CascadeSpace, evaluate_cascades
+from repro.core.costs import CostProfile
+from repro.core.transforms import Representation, apply_transform
+from repro.models.cnn import bce_loss, cnn_predict_proba, init_cnn
+from repro.train.optimizer import adamw
+
+
+@dataclass
+class ModelEntry:
+    name: str
+    arch: TahomaCNNConfig
+    rep: Representation
+    params: object
+    trusted: bool = False
+
+    def predict(self, raw_images) -> np.ndarray:
+        x = apply_transform(jnp.asarray(raw_images), self.rep)
+        return np.asarray(cnn_predict_proba(self.params, x))
+
+
+@dataclass
+class ModelBank:
+    entries: list[ModelEntry] = field(default_factory=list)
+
+    @property
+    def names(self):
+        return [e.name for e in self.entries]
+
+    @property
+    def reps(self):
+        return [e.rep for e in self.entries]
+
+    @property
+    def trusted_index(self) -> int:
+        return next(i for i, e in enumerate(self.entries) if e.trusted)
+
+    def score_matrix(self, raw_images) -> np.ndarray:
+        """(M, I): inference once per model (paper §V-D) — cached scores
+        power every downstream cascade simulation."""
+        return np.stack([e.predict(raw_images) for e in self.entries])
+
+
+# ------------------------------------------------------------- training ----
+def train_cnn(arch: TahomaCNNConfig, x, y, *, steps: int = 120,
+              batch: int = 16, lr: float = 3e-3, seed: int = 0):
+    """Train one specialized classifier (paper: 1-20 min on K80; here a
+    few seconds at reduced scale)."""
+    params = init_cnn(jax.random.PRNGKey(seed), arch)
+    opt = adamw(lr, weight_decay=1e-4)
+    state = opt.init(params)
+    x = jnp.asarray(x)
+    y = jnp.asarray(y, jnp.float32)
+
+    @jax.jit
+    def step(params, state, xb, yb):
+        loss, grads = jax.value_and_grad(bce_loss)(params, xb, yb)
+        params, state, _ = opt.update(grads, state, params)
+        return params, state, loss
+
+    n = x.shape[0]
+    rng = np.random.default_rng(seed)
+    for s in range(steps):
+        idx = rng.integers(0, n, size=batch)
+        params, state, _ = step(params, state, x[idx], y[idx])
+    return params
+
+
+def train_model_grid(train_x, train_y, archs: Sequence[TahomaCNNConfig],
+                     reps: Sequence[Representation], *,
+                     trusted_arch: TahomaCNNConfig | None = None,
+                     steps: int = 120, seed: int = 0,
+                     log: Callable[[str], None] | None = None) -> ModelBank:
+    """The A x F grid (paper §V-B) + one trusted heavy model (ResNet50
+    stand-in: deepest/widest CNN at full resolution, full color)."""
+    bank = ModelBank()
+    rep_cache: dict[Representation, np.ndarray] = {}
+    for rep in reps:
+        rep_cache[rep] = np.asarray(
+            apply_transform(jnp.asarray(train_x), rep))
+    for ai, arch0 in enumerate(archs):
+        for rep in reps:
+            arch = TahomaCNNConfig(
+                n_conv_layers=arch0.n_conv_layers,
+                conv_nodes=arch0.conv_nodes, dense_nodes=arch0.dense_nodes,
+                input_hw=rep.resolution, input_channels=rep.channels)
+            params = train_cnn(arch, rep_cache[rep], train_y, steps=steps,
+                               seed=seed + ai)
+            bank.entries.append(ModelEntry(
+                f"{arch.arch_id}_{rep.name}", arch, rep, params))
+            if log:
+                log(f"trained {bank.entries[-1].name}")
+    base_hw = train_x.shape[1]
+    t_arch = trusted_arch or TahomaCNNConfig(
+        n_conv_layers=3, conv_nodes=48, dense_nodes=64,
+        input_hw=base_hw, input_channels=3)
+    t_rep = Representation(base_hw, "rgb")
+    t_params = train_cnn(t_arch, train_x, train_y, steps=steps * 3,
+                         seed=seed + 999)
+    bank.entries.append(ModelEntry(
+        f"trusted_{t_arch.arch_id}", t_arch, t_rep, t_params, trusted=True))
+    return bank
+
+
+# -------------------------------------------------------------- profiling --
+def profile_infer_costs(bank: ModelBank, sample_raw, *, batch: int = 32,
+                        repeats: int = 3) -> dict[str, float]:
+    """Measured seconds/image of pure inference (the cost profiler of
+    Fig. 2, run in the current deployment)."""
+    out = {}
+    for e in bank.entries:
+        x = apply_transform(jnp.asarray(sample_raw[:batch]), e.rep)
+        fn = jax.jit(lambda p, xx: cnn_predict_proba(p, xx))
+        fn(e.params, x).block_until_ready()
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            fn(e.params, x).block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        out[e.name] = best / batch
+    return out
+
+
+# ---------------------------------------------------------- full pipeline --
+@dataclass
+class TahomaSystem:
+    bank: ModelBank
+    p_low: np.ndarray
+    p_high: np.ndarray
+    infer_s: dict[str, float]
+    profile: CostProfile
+    eval_scores: np.ndarray
+    eval_truth: np.ndarray
+    targets: tuple
+
+    def cascade_space(self, scenario: str, *, max_level: int = 3,
+                      reps_subset=None) -> CascadeSpace:
+        """Re-cost + re-evaluate all cascades under a deployment scenario
+        (cheap: pure linear algebra over cached scores — §V-E)."""
+        keep = None
+        if reps_subset is not None:
+            keep = [i for i, e in enumerate(self.bank.entries)
+                    if e.rep in reps_subset or e.trusted]
+        infer = np.array([self.infer_s[n] for n in self.bank.names])
+        return evaluate_cascades(
+            self.eval_scores, self.eval_truth, self.p_low, self.p_high,
+            self.bank.reps, infer, self.profile, scenario,
+            self.bank.trusted_index, max_level=max_level,
+            first_level_models=keep)
+
+
+def initialize_system(train_split, config_split, eval_split,
+                      archs, reps, *, targets=thr_mod.PRECISION_TARGETS,
+                      steps: int = 120, seed: int = 0,
+                      log=None) -> TahomaSystem:
+    (tr_x, tr_y), (cf_x, cf_y), (ev_x, ev_y) = (train_split, config_split,
+                                                eval_split)
+    bank = train_model_grid(tr_x, tr_y, archs, reps, steps=steps,
+                            seed=seed, log=log)
+    cfg_scores = bank.score_matrix(cf_x)
+    p_low, p_high = thr_mod.compute_thresholds_batch(cfg_scores, cf_y,
+                                                     targets)
+    infer_s = profile_infer_costs(bank, ev_x)
+    profile = CostProfile.modeled(infer_s, list(set(bank.reps)),
+                                  base_hw=tr_x.shape[1])
+    eval_scores = bank.score_matrix(ev_x)
+    return TahomaSystem(bank, p_low, p_high, infer_s, profile,
+                        eval_scores, ev_y, tuple(targets))

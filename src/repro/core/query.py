@@ -1,0 +1,68 @@
+"""Mini relational layer over an image corpus (paper §IV).
+
+A content-based query = metadata predicates (evaluated directly on stored
+tuples) AND binary contains-object predicates (evaluated by a selected
+cascade). The cascade's output materializes the predicate's virtual column
+(paper: 'the output of a classifier model can be thought of as a virtual
+column'), which is cached corpus-side so repeated queries are free.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Mapping, Sequence
+
+import numpy as np
+
+
+@dataclass
+class Corpus:
+    images: np.ndarray                       # (N, H, W, 3) float32 [0,1]
+    metadata: Mapping[str, np.ndarray]       # column -> (N,)
+    virtual_columns: dict = field(default_factory=dict)
+
+    def __len__(self):
+        return len(self.images)
+
+
+@dataclass
+class BinaryPredicate:
+    """contains_object(<concept>) implemented by an executor closure
+    mapping an image batch -> int labels (the selected cascade)."""
+    concept: str
+    executor: Callable[[np.ndarray], np.ndarray]
+
+
+def evaluate_predicate(corpus: Corpus, pred: BinaryPredicate,
+                       batch_size: int = 64) -> np.ndarray:
+    """Populate (and cache) the predicate's virtual column."""
+    if pred.concept in corpus.virtual_columns:
+        return corpus.virtual_columns[pred.concept]
+    n = len(corpus)
+    out = np.zeros((n,), np.int32)
+    for lo in range(0, n, batch_size):
+        hi = min(lo + batch_size, n)
+        chunk = corpus.images[lo:hi]
+        if len(chunk) < batch_size:          # static-shape pad (TPU)
+            pad = np.repeat(chunk[-1:], batch_size - len(chunk), axis=0)
+            labels = np.asarray(pred.executor(
+                np.concatenate([chunk, pad])))[:len(chunk)]
+        else:
+            labels = np.asarray(pred.executor(chunk))
+        out[lo:hi] = labels
+    corpus.virtual_columns[pred.concept] = out
+    return out
+
+
+def run_query(corpus: Corpus, *,
+              metadata_eq: Mapping[str, object] | None = None,
+              binary_preds: Sequence[BinaryPredicate] = ()) -> np.ndarray:
+    """SELECT image_id WHERE meta = ... AND contains(a) AND contains(b).
+    Metadata predicates are applied FIRST (cheap), binary predicates only
+    on the surviving rows' virtual columns."""
+    mask = np.ones(len(corpus), bool)
+    for col, val in (metadata_eq or {}).items():
+        mask &= np.asarray(corpus.metadata[col]) == val
+    for pred in binary_preds:
+        col = evaluate_predicate(corpus, pred)
+        mask &= col.astype(bool)
+    return np.where(mask)[0]

@@ -1,0 +1,46 @@
+"""Query-time cascade selection (paper Fig. 2 'cascade selector').
+
+Because per-model inference on the eval split is cached, selection —
+including re-costing every cascade under the CURRENT deployment scenario —
+is cheap enough to run inside query planning (paper §V-E)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.cascade import CascadeSpace
+from repro.core.pareto import pareto_indices
+
+
+@dataclass
+class Selection:
+    index: int
+    accuracy: float
+    throughput: float
+
+
+def pareto_set(space: CascadeSpace) -> np.ndarray:
+    return pareto_indices(space.acc, space.throughput)
+
+
+def select(space: CascadeSpace, *, min_accuracy: float | None = None,
+           min_throughput: float | None = None) -> Selection:
+    """Pick from the Pareto set: with a min_accuracy constraint return the
+    fastest qualifying cascade; with min_throughput the most accurate
+    qualifying one; with neither, the most accurate overall."""
+    idx = pareto_set(space)
+    acc = space.acc[idx]
+    thr = space.throughput[idx]
+    mask = np.ones(len(idx), bool)
+    if min_accuracy is not None:
+        mask &= acc >= min_accuracy
+    if min_throughput is not None:
+        mask &= thr >= min_throughput
+    if not mask.any():
+        raise ValueError("no cascade satisfies the constraints")
+    cand = np.where(mask)[0]
+    j = cand[np.argmax(thr[cand])] if min_accuracy is not None \
+        else cand[np.argmax(acc[cand])]
+    i = int(idx[j])
+    return Selection(i, float(space.acc[i]), float(space.throughput[i]))

@@ -1,0 +1,90 @@
+"""The physical input-representation space F (paper §IV Def. 6, §V-B).
+
+A Representation = (resolution, color) names one physical form of an image.
+``apply_transform`` produces it from the raw full-resolution RGB image.
+Downscaling uses area averaging (box filter) — exactly expressible as a
+reshape-mean, which lowers to TPU-friendly reductions; the fused Pallas
+kernel (kernels/image_transform.py) implements resize+channel+normalize in
+one HBM->VMEM pass and is validated against this module.
+
+Representations are the unit of data-handling cost (§VI): a cascade that
+uses the same representation at two levels pays its load/transform cost
+ONCE (core/costs.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterable
+
+import jax.numpy as jnp
+import numpy as np
+
+COLOR_REPS = ("rgb", "r", "g", "b", "gray")
+_GRAY = np.array([0.299, 0.587, 0.114], np.float32)
+
+
+@dataclass(frozen=True, order=True)
+class Representation:
+    resolution: int
+    color: str  # COLOR_REPS
+
+    @property
+    def channels(self) -> int:
+        return 3 if self.color == "rgb" else 1
+
+    @property
+    def values(self) -> int:
+        """Input values per image = resolution^2 * channels (paper §VII-D)."""
+        return self.resolution * self.resolution * self.channels
+
+    @property
+    def bytes(self) -> int:
+        return self.values  # uint8 storage
+
+    @property
+    def name(self) -> str:
+        return f"{self.resolution}x{self.resolution}_{self.color}"
+
+
+def resize_area(img, out_hw: int):
+    """Box-filter downscale (B,H,W,C) -> (B,out,out,C). H must be a
+    multiple of out_hw (the paper's resolutions nest under our base)."""
+    b, h, w, c = img.shape
+    if h == out_hw:
+        return img
+    assert h % out_hw == 0 and w % out_hw == 0, (h, w, out_hw)
+    f = h // out_hw
+    img = img.reshape(b, out_hw, f, out_hw, f, c)
+    return img.mean(axis=(2, 4))
+
+
+def color_transform(img, color: str):
+    """(B,H,W,3) -> (B,H,W,C') per the color representation."""
+    if color == "rgb":
+        return img
+    if color == "gray":
+        return (img * jnp.asarray(_GRAY)).sum(-1, keepdims=True)
+    idx = {"r": 0, "g": 1, "b": 2}[color]
+    return img[..., idx:idx + 1]
+
+
+def apply_transform(img, rep: Representation):
+    """Raw RGB float image in [0,1], (B,H,W,3) -> representation tensor."""
+    out = resize_area(img, rep.resolution)
+    return color_transform(out, rep.color)
+
+
+def representation_space(resolutions: Iterable[int],
+                         colors: Iterable[str] = COLOR_REPS
+                         ) -> list[Representation]:
+    return [Representation(r, c) for r in resolutions for c in colors]
+
+
+# analytic per-image transform FLOPs/bytes (feeds core/costs.py)
+def transform_cost(rep: Representation, base_hw: int) -> dict:
+    read = base_hw * base_hw * 3          # bytes in (uint8)
+    flops = base_hw * base_hw * 3         # box-filter adds
+    if rep.color == "gray":
+        flops += rep.resolution ** 2 * 3
+    write = rep.bytes
+    return {"flops": float(flops), "bytes": float(read + write)}

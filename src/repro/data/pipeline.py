@@ -1,0 +1,63 @@
+"""Host data pipeline: sharding-aware batching + background prefetch
+(compute/IO overlap — DESIGN.md §5)."""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator
+
+import jax
+import numpy as np
+
+
+class Prefetcher:
+    """Runs the producer iterator on a background thread with a bounded
+    buffer, overlapping host batch preparation with device compute."""
+
+    def __init__(self, it: Iterator, depth: int = 2):
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self.done = object()
+        self.err = None
+
+        def worker():
+            try:
+                for item in it:
+                    self.q.put(item)
+            except BaseException as e:  # propagate to consumer
+                self.err = e
+            finally:
+                self.q.put(self.done)
+
+        self.t = threading.Thread(target=worker, daemon=True)
+        self.t.start()
+
+    def __iter__(self):
+        while True:
+            item = self.q.get()
+            if item is self.done:
+                if self.err:
+                    raise self.err
+                return
+            yield item
+
+
+def shard_batch(batch: dict, mesh):
+    """Place a host batch onto the mesh with the policy batch sharding."""
+    from jax.sharding import NamedSharding
+    from repro.sharding.policy import batch_spec
+    return {k: jax.device_put(
+        v, NamedSharding(mesh, batch_spec(mesh, np.ndim(v))))
+        for k, v in batch.items()}
+
+
+def batched(x, y, batch: int, *, seed: int = 0, epochs: int | None = None):
+    """Shuffled epoch iterator over (x, y) host arrays."""
+    rng = np.random.default_rng(seed)
+    n = len(x)
+    e = 0
+    while epochs is None or e < epochs:
+        idx = rng.permutation(n)
+        for lo in range(0, n - batch + 1, batch):
+            sel = idx[lo:lo + batch]
+            yield {"images": x[sel], "labels": y[sel]}
+        e += 1

@@ -1,0 +1,94 @@
+"""Flash attention (online softmax) Pallas kernel — causal, GQA-ready.
+
+Grid (batch*heads, n_q_blocks, n_kv_blocks) with the KV axis innermost
+("arbitrary"); the running max / denominator / output accumulator live in
+VMEM scratch and persist across KV steps. Causal skipping: KV blocks fully
+above the diagonal contribute nothing and are masked per-element on the
+diagonal block. Block shapes default to MXU-aligned (128).
+
+Serving uses this for long prefill on real TPUs; the dry-run lowers the
+pure-jnp path so roofline FLOP accounting stays visible (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, bq: int, bk: int, nk: int):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _block():
+        q = q_ref[0]                                   # (bq, d)
+        k = k_ref[0]                                   # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal:
+        pl.when(qi * bq + bq > ki * bk)(_block)   # skip fully-masked blocks
+    else:
+        _block()
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
+                    bk: int = 128, interpret: bool = True):
+    """q (B,H,S,D); k/v (B,H,T,D) (kv heads already repeated).
+    Returns (B,H,S,D)."""
+    b, h, s, d = q.shape
+    t = k.shape[2]
+    bq = min(bq, s)
+    bk = min(bk, t)
+    assert s % bq == 0 and t % bk == 0, (s, t, bq, bk)
+    scale = d ** -0.5
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, t, d)
+    vf = v.reshape(b * h, t, d)
+    nk = t // bk
+    from jax.experimental.pallas import tpu as pltpu
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          bq=bq, bk=bk, nk=nk),
+        grid=(b * h, s // bq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda g, i, j: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, d), jnp.float32)],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)

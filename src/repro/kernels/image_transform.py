@@ -1,0 +1,59 @@
+"""Fused physical-representation transform kernel (paper §V-B / §VI).
+
+One HBM->VMEM pass per image tile performs: area-average resize
+(base_hw -> res), color projection (RGB keep / channel select / grayscale —
+all expressed as a length-3 channel weight matrix), and normalization.
+This is THE data-handling hot spot the paper's cost model prices
+(t_transform); fusing the three stages removes two HBM round-trips vs the
+naive resize->select->normalize chain.
+
+Grid: one program per batch element (images are small: 224*224*3 f32 =
+602 KB — fits VMEM comfortably with the output tile).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _transform_kernel(img_ref, cw_ref, out_ref, *, factor: int,
+                      res: int, out_ch: int, mean: float, inv_std: float):
+    img = img_ref[0]                                   # (H, W, 3)
+    h = img.reshape(res, factor, res, factor, 3)
+    pooled = jnp.mean(h, axis=(1, 3))                  # (res, res, 3)
+    cw = cw_ref[...]                                   # (3, out_ch)
+    proj = jax.lax.dot_general(
+        pooled.reshape(res * res, 3), cw,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).reshape(res, res, out_ch)
+    out_ref[0] = (proj - mean) * inv_std
+
+
+def fused_transform(images, channel_weights, res: int,
+                    mean: float = 0.5, std: float = 0.25,
+                    interpret: bool = True):
+    """images (B, H, H, 3) float32; channel_weights (3, C') encodes the
+    color representation (identity columns / unit column / gray weights).
+    -> (B, res, res, C') normalized."""
+    b, h, w, _ = images.shape
+    assert h == w and h % res == 0, (h, w, res)
+    factor = h // res
+    out_ch = channel_weights.shape[1]
+    kernel = functools.partial(
+        _transform_kernel, factor=factor, res=res, out_ch=out_ch,
+        mean=mean, inv_std=1.0 / std)
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, h, w, 3), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((3, out_ch), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, res, res, out_ch),
+                               lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, res, res, out_ch), jnp.float32),
+        interpret=interpret,
+    )(images.astype(jnp.float32), channel_weights.astype(jnp.float32))

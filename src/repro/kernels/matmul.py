@@ -1,0 +1,68 @@
+"""Blocked MXU matmul kernel: (M,K) @ (K,N) with explicit VMEM tiling.
+
+Used by the serving path for tiny-CNN dense layers and im2col'd convs
+(DESIGN.md §3). Tiles default to 128-aligned MXU shapes; the K dimension is
+the innermost ("arbitrary") grid axis with a float32 VMEM accumulator that
+persists across K steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul(a, b, *, bm: int = 128, bn: int = 128, bk: int = 128,
+           out_dtype=None, interpret: bool = True):
+    """Pads to tile multiples, runs the blocked kernel, slices back."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    out_dtype = out_dtype or a.dtype
+    bm, bn, bk = min(bm, _ceil(m)), min(bn, _ceil(n)), min(bk, _ceil(k))
+    mp, np_, kp = _pad_to(m, bm), _pad_to(n, bn), _pad_to(k, bk)
+    a_p = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+    nk = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        scratch_shapes=[_vmem((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a_p, b_p)
+    return out[:m, :n]
+
+
+def _ceil(x: int, base: int = 8) -> int:
+    return max(base, 1 << (x - 1).bit_length()) if x else base
+
+
+def _pad_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

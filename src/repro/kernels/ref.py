@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.transforms import resize_area
+
+
+def fused_transform_ref(images, channel_weights, res: int,
+                        mean: float = 0.5, std: float = 0.25):
+    x = resize_area(images.astype(jnp.float32), res)
+    x = jnp.einsum("bhwc,cd->bhwd", x, channel_weights.astype(jnp.float32))
+    return (x - mean) / std
+
+
+def matmul_ref(a, b, out_dtype=None):
+    out = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
+    return out.astype(out_dtype or a.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q (B,H,S,D); k/v (B,H,T,D)."""
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32)
+    s = s * (q.shape[-1] ** -0.5)
+    if causal:
+        qn, kn = q.shape[2], k.shape[2]
+        mask = jnp.arange(qn)[:, None] >= jnp.arange(kn)[None, :]
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(q.dtype), v)
+
+
+def ssd_scan_ref(x, dt, a, bmat, cmat, *, chunk: int = 128):
+    """Reference = the model-layer implementation (models/ssm.py)."""
+    from repro.models.ssm import ssd_chunked
+    y, _ = ssd_chunked(x, dt, a, bmat, cmat, chunk)
+    return y

@@ -1,0 +1,254 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, print memory/cost analysis, account roofline terms
+(launch/costing.py), and write one JSON artifact per cell.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2.5-32b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --sweep [--mesh both] [--variant v --set k=v]
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+ART_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def model_flops(kind: str, n_active: int, global_batch: int,
+                seq_len: int) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (forward-only); D = tokens."""
+    tokens = global_batch * (1 if kind == "decode" else seq_len)
+    return (6.0 if kind == "train" else 2.0) * n_active * tokens
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             overrides: dict, variant: str = "") -> dict:
+    import jax
+    from repro.configs.registry import get_arch
+    from repro.configs.shapes import SHAPES, shape_applicable
+    from repro.launch import costing, hw, steps
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.factory import build_model
+
+    t0 = time.time()
+    arch = get_arch(arch_name).replace(head_pad_to=16)
+    shape = SHAPES[shape_name]
+    shape_kw = {k: v for k, v in overrides.items()
+                if k in type(shape).__dataclass_fields__}
+    arch_kw = {k: v for k, v in overrides.items()
+               if k in type(arch).__dataclass_fields__}
+    if shape_kw:
+        import dataclasses
+        shape = dataclasses.replace(shape, **shape_kw)
+    if arch_kw:
+        arch = arch.replace(**arch_kw)
+
+    if overrides.get("tuned"):
+        from repro.configs.deployment import tuned_shape
+        shape = tuned_shape(arch, shape)
+
+    ok, reason = shape_applicable(arch, shape)
+    mesh_name = "multi" if multi_pod else "single"
+    meta = dict(arch=arch_name, shape=shape_name, mesh=mesh_name,
+                variant=variant, overrides=overrides)
+    if not ok:
+        return {**meta, "status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    model = build_model(arch)
+    p_sds, _ = steps.params_sds(model, mesh,
+                                tp_only=shape.params_tp_only)
+    batch = steps.input_specs(arch, shape, mesh)
+
+    cache_bytes = 0.0
+    if shape.kind == "train":
+        from repro.train.optimizer import adamw
+        opt = adamw(1e-4)
+        step_fn, info = steps.make_train_step(model, mesh, shape, opt)
+        o_sds, _ = steps.opt_state_sds(opt, steps.abstract_params(model),
+                                       mesh)
+        args = (p_sds, o_sds, batch)
+        jit_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+    elif shape.kind == "prefill":
+        step_fn = steps.make_prefill_step(model, mesh, shape)
+        args = (p_sds, batch)
+        jit_fn = jax.jit(step_fn)
+        info = {"n_micro": 1}
+        cache_shapes = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                     shape.kv_dtype))
+        cache_bytes = costing.tree_bytes(cache_shapes)
+    else:
+        step_fn = steps.make_decode_step(model, mesh, shape)
+        c_sds = steps.cache_specs_sds(model, shape, mesh)
+        cache_bytes = costing.tree_bytes(c_sds)
+        args = (p_sds, c_sds, batch)
+        jit_fn = jax.jit(step_fn, donate_argnums=(1,))
+        info = {"n_micro": 1}
+
+    with mesh:
+        jaxpr = jax.make_jaxpr(step_fn)(*args)
+        flops_global = costing.jaxpr_flops(jaxpr)
+        del jaxpr
+        lowered = jit_fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    print("memory_analysis:", ma)
+    print("cost_analysis (raw, while-bodies-once) flops/bytes:",
+          ca.get("flops"), ca.get("bytes accessed"))
+    coll = costing.parse_collectives(compiled.as_text())
+
+    n_shapes = steps.abstract_params(model)
+    n_total = steps.count_params_from_shapes(n_shapes)
+    n_active = steps.count_active_params(n_shapes, arch)
+    wf = (steps.dp_size(mesh)
+          if shape.params_tp_only and shape.kind != "train" else 1.0)
+    mem = costing.analytic_bytes(shape.kind, arch, shape, n_total,
+                                 info.get("n_micro", 1), cache_bytes,
+                                 chips, weight_read_factor=wf)
+    mf = model_flops(shape.kind, n_active, shape.global_batch,
+                     shape.seq_len)
+
+    flops_dev = flops_global / chips
+    bytes_dev = mem.total / chips
+    coll_dev = float(coll["total_bytes"])
+    terms = {
+        "compute_s": flops_dev / hw.PEAK_FLOPS_BF16,
+        "memory_s": bytes_dev / hw.HBM_BW,
+        "collective_s": coll_dev / hw.ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    bound_s = max(terms.values())
+    mem_stats = {f: getattr(ma, f) for f in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "alias_size_in_bytes",
+        "generated_code_size_in_bytes")} if ma else {}
+
+    return {
+        **meta, "status": "ok", "chips": chips, "step_info": info,
+        "seconds": {"lower": round(t_lower, 1),
+                    "compile": round(t_compile, 1)},
+        "per_device": {"hlo_flops": flops_dev, "hbm_bytes": bytes_dev,
+                       "collective_bytes": coll_dev},
+        "global": {"hlo_flops": flops_global, "hbm_bytes": mem.total,
+                   "collective_bytes": coll_dev * chips},
+        "mem_breakdown_global": mem.breakdown,
+        "collectives": coll,
+        "xla_cost_analysis_raw": {k: float(ca[k]) for k in
+                                  ("flops", "bytes accessed") if k in ca},
+        "memory_analysis_per_device": mem_stats,
+        "cache_bytes_global": cache_bytes,
+        "params": {"total": n_total, "active": n_active},
+        "model_flops_global": mf,
+        "useful_flops_ratio": mf / flops_global if flops_global else None,
+        "roofline_terms_s": terms, "dominant": dominant,
+        "step_time_bound_s": bound_s,
+        "roofline_fraction": (terms["compute_s"] / bound_s
+                              if bound_s else None),
+    }
+
+
+def cell_path(arch: str, shape: str, mesh: str, variant: str = "") -> Path:
+    v = f"__{variant}" if variant else ""
+    safe = arch.replace("/", "_").replace(".", "_")
+    return ART_DIR / f"{safe}__{shape}__{mesh}{v}.json"
+
+
+def all_cells():
+    from repro.configs.registry import ARCHS
+    from repro.configs.shapes import SHAPES
+    for a in ARCHS:
+        for s in SHAPES:
+            yield a, s
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--variant", default="")
+    ap.add_argument("--set", action="append", default=[],
+                    help="override: key=value (shape or arch field)")
+    ap.add_argument("--tuned", action="store_true",
+                    help="apply configs/deployment.py tuned settings")
+    ap.add_argument("--sweep", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--timeout", type=int, default=2400)
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+    if args.tuned:
+        overrides["tuned"] = True
+
+    ART_DIR.mkdir(parents=True, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if args.sweep:
+        for arch, shape in all_cells():
+            for mesh in meshes:
+                path = cell_path(arch, shape, mesh, args.variant)
+                if path.exists() and not args.force:
+                    print(f"skip (exists): {path.name}")
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape, "--mesh", mesh]
+                if args.variant:
+                    cmd += ["--variant", args.variant]
+                if args.tuned:
+                    cmd += ["--tuned"]
+                for kv in args.set:
+                    cmd += ["--set", kv]
+                print(f"=== {arch} x {shape} x {mesh}", flush=True)
+                try:
+                    r = subprocess.run(cmd, timeout=args.timeout,
+                                       capture_output=True, text=True)
+                    if r.returncode != 0:
+                        err = (r.stderr or "")[-2000:]
+                        path.write_text(json.dumps(
+                            dict(arch=arch, shape=shape, mesh=mesh,
+                                 variant=args.variant, status="error",
+                                 error=err), indent=1))
+                        print(f"ERROR: {err[-400:]}", flush=True)
+                    else:
+                        print(r.stdout[-400:], flush=True)
+                except subprocess.TimeoutExpired:
+                    path.write_text(json.dumps(
+                        dict(arch=arch, shape=shape, mesh=mesh,
+                             variant=args.variant, status="timeout"),
+                        indent=1))
+                    print("TIMEOUT", flush=True)
+        return
+
+    assert args.arch and args.shape, "--arch/--shape required (or --sweep)"
+    for mesh in meshes:
+        res = run_cell(args.arch, args.shape, mesh == "multi", overrides,
+                       args.variant)
+        path = cell_path(args.arch, args.shape, mesh, args.variant)
+        path.write_text(json.dumps(res, indent=1, default=str))
+        print(json.dumps({k: res.get(k) for k in (
+            "arch", "shape", "mesh", "status", "roofline_terms_s",
+            "dominant", "useful_flops_ratio", "roofline_fraction",
+            "reason")}, indent=1, default=str))
+
+
+if __name__ == "__main__":
+    main()

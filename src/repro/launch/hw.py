@@ -1,0 +1,6 @@
+"""TPU v5e hardware constants for the roofline model (per chip)."""
+PEAK_FLOPS_BF16 = 197e12     # FLOP/s
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link (spec: chips x link_bw)
+CHIPS_SINGLE_POD = 256
+CHIPS_MULTI_POD = 512

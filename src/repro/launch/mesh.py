@@ -1,0 +1,23 @@
+"""Production meshes. A FUNCTION (not a module-level constant) so importing
+this module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh(model_axis: int = 1, data_axis: int | None = None):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    data_axis = data_axis or (n // model_axis)
+    return jax.make_mesh((data_axis, model_axis), ("data", "model"),
+                         axis_types=_auto(2))

@@ -1,0 +1,303 @@
+"""Step builders: train_step / prefill_step / decode_step with production
+shardings, microbatched gradient accumulation, and ShapeDtypeStruct
+input_specs for the dry-run (no allocation).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.factory import Model, build_model
+from repro.sharding import policy
+from repro.train.optimizer import adamw
+
+MOE_AUX_COEF = 0.01
+
+
+# ------------------------------------------------------------------ loss ---
+def lm_loss(logits, labels, vocab_size: int):
+    """Next-token CE; labels already aligned (labels[t] = target at t);
+    label < 0 masks. Handles vocab padding by masking padded columns."""
+    vp = logits.shape[-1]
+    lg = logits.astype(jnp.float32)
+    if vp > vocab_size:
+        col = jnp.arange(vp)
+        lg = lg + jnp.where(col < vocab_size, 0.0, -1e9)[None, None, :]
+    logz = jax.scipy.special.logsumexp(lg, axis=-1)
+    lab = jnp.clip(labels, 0, vocab_size - 1)
+    gold = jnp.take_along_axis(lg, lab[..., None], axis=-1)[..., 0]
+    valid = (labels >= 0).astype(jnp.float32)
+    return jnp.sum((logz - gold) * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+
+
+# ------------------------------------------------------------ input specs --
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _dp(mesh):
+    dp = policy.dp_axes(mesh)
+    return dp if len(dp) > 1 else (dp[0] if dp else None)
+
+
+def dp_size(mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return math.prod(sizes[a] for a in policy.dp_axes(mesh))
+
+
+def batch_shardable(shape_cfg: ShapeConfig, mesh) -> bool:
+    return shape_cfg.global_batch % dp_size(mesh) == 0
+
+
+def input_specs(arch: ArchConfig, shape_cfg: ShapeConfig, mesh) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell
+    (weak-type-correct, shardable, no device allocation)."""
+    b, s = shape_cfg.global_batch, shape_cfg.seq_len
+    dp = _dp(mesh) if batch_shardable(shape_cfg, mesh) else None
+    dt = jnp.dtype(arch.dtype)
+    batch: dict[str, Any] = {}
+    if shape_cfg.kind == "decode":
+        batch["tokens"] = _sds((b, 1), jnp.int32, mesh, P(dp, None))
+    else:
+        batch["tokens"] = _sds((b, s), jnp.int32, mesh, P(dp, None))
+        if shape_cfg.kind == "train":
+            batch["labels"] = _sds((b, s), jnp.int32, mesh, P(dp, None))
+    if arch.family == "audio":
+        batch["enc_frames"] = _sds((b, arch.encoder.n_frames, arch.d_model),
+                                   dt, mesh, P(dp, None, None))
+    if arch.family == "vlm":
+        sl = 1 if shape_cfg.kind == "decode" else s
+        batch["mrope_positions"] = _sds((3, b, sl), jnp.int32, mesh,
+                                        P(None, dp, None))
+        if shape_cfg.kind != "decode":
+            batch["vision_embeds"] = _sds((b, arch.vision.n_patches,
+                                           arch.d_model), dt, mesh,
+                                          P(dp, None, None))
+    return batch
+
+
+# ------------------------------------------------------------ cache specs --
+def cache_pspecs(cache_shapes, shape_cfg: ShapeConfig, mesh):
+    """Decode-cache PartitionSpecs. batch-shardable cells: batch over dp,
+    cache sequence over 'model' (flash-decoding style LSE combine is left
+    to SPMD). long-context (batch=1): sequence over 'data', heads/channels
+    over 'model'."""
+    shardable = batch_shardable(shape_cfg, mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = _dp(mesh)
+
+    def div(axis, dim: int):
+        """axis (or axis tuple) only if it divides dim, else None."""
+        if axis is None:
+            return None
+        axes = (axis,) if isinstance(axis, str) else tuple(axis)
+        prod = 1
+        for a in axes:
+            prod *= sizes.get(a, 1)
+        return axis if prod > 1 and dim % prod == 0 else None
+
+    def leaf_spec(path, x):
+        name = policy.leaf_name(path)
+        nd = len(x.shape)
+        if name == "pos":
+            return P(div(dp, x.shape[0])) if shardable else P()
+        b_ax = div(dp, x.shape[1]) if (shardable and nd > 1) else None
+        if name in ("k", "v"):            # (L,B,T,KH,Dh)
+            seq_ax = div("model" if shardable else "data", x.shape[2])
+            kh_ax = None
+            if not shardable:
+                kh_ax = div("model", x.shape[3])
+            return P(None, b_ax, seq_ax, kh_ax, None)
+        if name in ("k_scale", "v_scale"):
+            seq_ax = div("model" if shardable else "data", x.shape[2])
+            return P(None, b_ax, seq_ax, None)
+        if name in ("c_kv", "k_rope"):    # (L,B,T,r)
+            seq_ax = div("model" if shardable else "data", x.shape[2])
+            return P(None, b_ax, seq_ax, None)
+        if name in ("conv_x", "conv_b", "conv_c"):  # (L,B,ch,K-1)
+            return P(None, b_ax, div("model", x.shape[2]), None)
+        if name == "state":               # (L,B,H,P,N)
+            return P(None, b_ax, div("model", x.shape[2]), None, None)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_shapes)
+
+
+def cache_specs_sds(model: Model, shape_cfg: ShapeConfig, mesh):
+    shapes = jax.eval_shape(
+        functools.partial(model.init_cache, shape_cfg.global_batch,
+                          shape_cfg.seq_len, shape_cfg.kv_dtype))
+    specs = cache_pspecs(shapes, shape_cfg, mesh)
+    return jax.tree.map(
+        lambda sh, sp: jax.ShapeDtypeStruct(
+            sh.shape, sh.dtype, sharding=NamedSharding(mesh, sp)),
+        shapes, specs)
+
+
+# ------------------------------------------------------------ train step ---
+def _split_micro(x, n_micro: int, batch_axis: int):
+    b = x.shape[batch_axis]
+    mb = b // n_micro
+    shape = x.shape[:batch_axis] + (n_micro, mb) + x.shape[batch_axis + 1:]
+    x = x.reshape(shape)
+    return jnp.moveaxis(x, batch_axis, 0)
+
+
+def make_train_step(model: Model, mesh, shape_cfg: ShapeConfig,
+                    optimizer=None, aux_coef: float = MOE_AUX_COEF,
+                    compressor=None):
+    """compressor: optional train.compression.Compressor — when given, the
+    opt_state becomes {"opt": ..., "residual": ...} and gradients go
+    through an error-feedback compress->decompress round trip ahead of the
+    optimizer (stands in for the pre-reduce compression on a real fleet)."""
+    cfg = model.cfg
+    optimizer = optimizer or adamw(1e-4)
+    dpn = dp_size(mesh)
+    per_shard = max(1, shape_cfg.global_batch // dpn)
+    n_micro = max(1, per_shard // max(shape_cfg.microbatch_seqs_per_shard, 1))
+    while shape_cfg.global_batch % n_micro:
+        n_micro -= 1
+    moe_groups = dpn if shape_cfg.global_batch % dpn == 0 else 1
+
+    batch_axes = {"mrope_positions": 1}
+
+    train_chunk = shape_cfg.train_attn_chunk or (
+        shape_cfg.attn_chunk if shape_cfg.seq_len > 8192 else 0)
+    acc_dtype = jnp.dtype(shape_cfg.grad_accum_dtype)
+
+    def loss_fn(params, micro):
+        logits, aux, _ = model.forward(
+            params, micro, remat_policy=shape_cfg.remat_policy,
+            attn_chunk=train_chunk, moe_groups=moe_groups)
+        loss = lm_loss(logits, micro["labels"], cfg.vocab_size)
+        return loss + aux_coef * aux, loss
+
+    def train_step(params, opt_state, batch):
+        with policy.use_ctx_mesh(mesh):
+            batch = {k: policy.constrain_batch(v, mesh)
+                     if k != "mrope_positions" else v
+                     for k, v in batch.items()}
+            micros = {k: _split_micro(v, n_micro, batch_axes.get(k, 0))
+                      for k, v in batch.items()}
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dtype),
+                                 params)
+
+            def micro_step(carry, micro):
+                g_acc, l_acc = carry
+                (_, loss), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, micro)
+                g_acc = jax.tree.map(lambda a, g: a + g.astype(acc_dtype),
+                                     g_acc, grads)
+                return (g_acc, l_acc + loss), None
+
+            (g_acc, loss_sum), _ = jax.lax.scan(micro_step, (zeros, 0.0),
+                                                micros)
+            grads = jax.tree.map(lambda g: g / n_micro, g_acc)
+            if compressor is not None:
+                grads, resid, _ = compressor.apply(
+                    grads, opt_state["residual"])
+                params2, opt2, om = optimizer.update(
+                    grads, opt_state["opt"], params)
+                opt2 = {"opt": opt2, "residual": resid}
+            else:
+                params2, opt2, om = optimizer.update(grads, opt_state,
+                                                     params)
+            metrics = {"loss": loss_sum / n_micro, **om}
+            return params2, opt2, metrics
+
+    return train_step, {"n_micro": n_micro, "moe_groups": moe_groups}
+
+
+# ------------------------------------------------------ serve step fns -----
+def make_prefill_step(model: Model, mesh, shape_cfg: ShapeConfig):
+    dpn = dp_size(mesh)
+    moe_groups = dpn if shape_cfg.global_batch % dpn == 0 else 1
+
+    def prefill_step(params, batch):
+        with policy.use_ctx_mesh(mesh):
+            batch = {k: policy.constrain_batch(v, mesh)
+                     if k != "mrope_positions" else v
+                     for k, v in batch.items()}
+            return model.prefill(params, batch,
+                                 attn_chunk=shape_cfg.attn_chunk,
+                                 kv_dtype=shape_cfg.kv_dtype,
+                                 moe_groups=moe_groups,
+                                 last_only=shape_cfg.prefill_last_only)
+    return prefill_step
+
+
+def make_decode_step(model: Model, mesh, shape_cfg: ShapeConfig):
+    def decode_step(params, cache, batch):
+        with policy.use_ctx_mesh(mesh):
+            logits, new_cache = model.decode(params, cache, batch,
+                                             moe_groups=1)
+            return logits, new_cache
+    return decode_step
+
+
+# --------------------------------------------------------- param helpers ---
+def abstract_params(model: Model):
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def _drop_fsdp(spec: P) -> P:
+    """Serving-mode param sharding: keep TP ('model'), drop ZeRO axes —
+    weights stay resident instead of being all-gathered every step."""
+    def clean(part):
+        if part is None:
+            return None
+        axes = (part,) if isinstance(part, str) else tuple(part)
+        keep = tuple(a for a in axes if a == "model")
+        return keep[0] if len(keep) == 1 else (keep if keep else None)
+    return P(*(clean(p) for p in spec))
+
+
+def params_sds(model: Model, mesh, tp_only: bool = False):
+    shapes = abstract_params(model)
+    specs = policy.param_pspecs(shapes, mesh)
+    if tp_only:
+        specs = jax.tree.map(_drop_fsdp, specs,
+                             is_leaf=lambda x: isinstance(x, P))
+    shards = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                          is_leaf=lambda x: isinstance(x, P))
+    return jax.tree.map(
+        lambda sh, sd: jax.ShapeDtypeStruct(sh.shape, sh.dtype, sharding=sd),
+        shapes, shards), shards
+
+
+def opt_state_sds(optimizer, params_shapes, mesh):
+    shapes = jax.eval_shape(optimizer.init, params_shapes)
+    shards = policy.param_shardings(shapes, mesh)
+    return jax.tree.map(
+        lambda sh, sd: jax.ShapeDtypeStruct(sh.shape, sh.dtype, sharding=sd),
+        shapes, shards), shards
+
+
+def count_params_from_shapes(shapes) -> int:
+    return sum(math.prod(x.shape) if x.shape else 1
+               for x in jax.tree.leaves(shapes))
+
+
+def count_active_params(shapes, arch: ArchConfig) -> int:
+    """MoE: non-routed params + top_k/E of routed expert params."""
+    if arch.moe is None:
+        return count_params_from_shapes(shapes)
+    total = routed = 0
+
+    def visit(path, x):
+        nonlocal total, routed
+        n = math.prod(x.shape) if x.shape else 1
+        total += n
+        if policy.leaf_name(path) in ("w_gate_e", "w_up_e", "w_down_e"):
+            routed += n
+    jax.tree_util.tree_map_with_path(visit, shapes)
+    frac = arch.moe.top_k / arch.moe.num_experts
+    return int(total - routed + routed * frac)

@@ -1,0 +1,85 @@
+"""TAHOMA's specialized classifier family (paper Fig. 3):
+[conv(3x3) -> ReLU -> maxpool(2x2)] x L -> dense ReLU -> sigmoid output.
+
+The architecture space A varies (n_conv_layers, conv_nodes, dense_nodes);
+the input representation space F (resolution x color) is applied by
+core/transforms.py BEFORE the model sees the image — jointly they form the
+paper's model design space A x F (§IV Def. 5/6).
+
+CNNs run in float32 (they are trained on CPU in this container; on TPU the
+convs lower to im2col + the MXU matmul kernel — kernels/matmul.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TahomaCNNConfig
+
+
+def init_cnn(key, cfg: TahomaCNNConfig):
+    ks = jax.random.split(key, cfg.n_conv_layers + 2)
+    params = {"conv": []}
+    c_in = cfg.input_channels
+    hw = cfg.input_hw
+    for i in range(cfg.n_conv_layers):
+        w = jax.random.normal(ks[i], (cfg.kernel_size, cfg.kernel_size,
+                                      c_in, cfg.conv_nodes)) * (
+            2.0 / (cfg.kernel_size ** 2 * c_in)) ** 0.5
+        params["conv"].append({"w": w.astype(jnp.float32),
+                               "b": jnp.zeros((cfg.conv_nodes,))})
+        c_in = cfg.conv_nodes
+        hw = hw // 2
+    flat = hw * hw * c_in
+    params["dense_w"] = (jax.random.normal(ks[-2], (flat, cfg.dense_nodes))
+                         * (2.0 / flat) ** 0.5).astype(jnp.float32)
+    params["dense_b"] = jnp.zeros((cfg.dense_nodes,))
+    params["out_w"] = (jax.random.normal(ks[-1], (cfg.dense_nodes, 1))
+                       * (1.0 / cfg.dense_nodes) ** 0.5).astype(jnp.float32)
+    params["out_b"] = jnp.zeros((1,))
+    return params
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def cnn_forward(params, images):
+    """images (B, H, W, C) float32 in [0,1] -> pre-sigmoid logits (B,)."""
+    h = images
+    for layer in params["conv"]:
+        h = jax.lax.conv_general_dilated(
+            h, layer["w"], window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        h = jax.nn.relu(h + layer["b"])
+        h = _maxpool2(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["dense_w"] + params["dense_b"])
+    return (h @ params["out_w"] + params["out_b"])[:, 0]
+
+
+def cnn_predict_proba(params, images):
+    return jax.nn.sigmoid(cnn_forward(params, images))
+
+
+def cnn_flops(cfg: TahomaCNNConfig) -> float:
+    """Forward FLOPs per image (the cost profiler's analytic input)."""
+    total = 0.0
+    hw, c_in = cfg.input_hw, cfg.input_channels
+    for _ in range(cfg.n_conv_layers):
+        total += 2.0 * hw * hw * cfg.kernel_size ** 2 * c_in \
+            * cfg.conv_nodes
+        c_in = cfg.conv_nodes
+        hw //= 2
+    flat = hw * hw * c_in
+    total += 2.0 * flat * cfg.dense_nodes + 2.0 * cfg.dense_nodes
+    return total
+
+
+def bce_loss(params, images, labels):
+    """Numerically-stable binary cross-entropy (labels in {0,1})."""
+    logits = cnn_forward(params, images)
+    z = jnp.maximum(logits, 0.0)
+    loss = z - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    return jnp.mean(loss)

@@ -1,0 +1,143 @@
+"""Shared model building blocks (no flax — pure functional pytrees).
+
+Conventions
+-----------
+* ``init_*`` functions return nested dicts of jnp arrays (the params pytree).
+* Every leaf's *name* (its last dict key) is drawn from a fixed vocabulary;
+  sharding/policy.py maps leaf names -> logical axes -> mesh PartitionSpecs,
+  so sharding stays out of model code entirely.
+* Norms compute in float32 and cast back; params live in cfg.dtype.
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def pdtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.bfloat16, scale=1.0):
+    fan_in = shape[in_axis]
+    std = scale / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.bfloat16):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------- norms ----
+def init_norm(cfg, with_bias: bool | None = None):
+    bias = cfg.norm == "layernorm" if with_bias is None else with_bias
+    p = {"scale": jnp.ones((cfg.d_model,), pdtype(cfg))}
+    if bias:
+        p["bias"] = jnp.zeros((cfg.d_model,), pdtype(cfg))
+    return p
+
+
+def apply_norm(p, x, cfg, kind: str | None = None):
+    kind = kind or cfg.norm
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True)
+                                + cfg.norm_eps)
+    else:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        xf = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+    out = xf * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        out = out + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rmsnorm_vec(x, scale, eps=1e-5):
+    """Norm over last axis for arbitrary-width vectors (MLA latents etc.)."""
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- RoPE ----
+def rope_angles(positions, dim: int, theta: float):
+    """positions (...,) int -> cos/sin of shape (..., dim//2), float32."""
+    inv = 1.0 / (theta ** (np.arange(0, dim, 2, dtype=np.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (..., dim); cos/sin broadcastable to (..., dim//2). Pairs are the
+    llama 'rotate_half' convention (first/second half split)."""
+    d = x.shape[-1] // 2
+    x1, x2 = x[..., :d], x[..., d:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def rope_for_heads(positions, head_dim: int, theta: float):
+    """positions (B, S) -> cos/sin (B, S, 1, head_dim//2) for (B,S,H,D) q/k."""
+    cos, sin = rope_angles(positions, head_dim, theta)
+    return cos[:, :, None, :], sin[:, :, None, :]
+
+
+def mrope_for_heads(positions3, head_dim: int, theta: float,
+                    sections: Sequence[int]):
+    """Qwen2-VL M-RoPE: positions3 (3, B, S) carries (t, h, w) position
+    streams; head_dim//2 frequency slots are split into ``sections`` and each
+    section takes its angles from the corresponding stream."""
+    assert sum(sections) == head_dim // 2, (sections, head_dim)
+    cos3, sin3 = rope_angles(positions3, head_dim, theta)  # (3,B,S,hd/2)
+    parts_c, parts_s = [], []
+    lo = 0
+    for i, sec in enumerate(sections):
+        parts_c.append(cos3[i, ..., lo:lo + sec])
+        parts_s.append(sin3[i, ..., lo:lo + sec])
+        lo += sec
+    cos = jnp.concatenate(parts_c, -1)
+    sin = jnp.concatenate(parts_s, -1)
+    return cos[:, :, None, :], sin[:, :, None, :]
+
+
+def sinusoidal_positions(n_pos: int, d_model: int):
+    """Whisper-style sinusoidal embeddings (n_pos, d_model), float32."""
+    half = d_model // 2
+    freq = np.exp(-np.log(10000.0) * np.arange(half) / max(half - 1, 1))
+    t = np.arange(n_pos)[:, None] * freq[None, :]
+    return jnp.asarray(np.concatenate([np.sin(t), np.cos(t)], axis=1),
+                       jnp.float32)
+
+
+# ----------------------------------------------------------- embeddings ----
+def init_embedding(key, cfg):
+    vp = cfg.padded_vocab()
+    return {"embedding": embed_init(key, (vp, cfg.d_model), pdtype(cfg))}
+
+
+def embed_tokens(p, tokens, cfg):
+    return jnp.take(p["embedding"], tokens, axis=0)
+
+
+def init_lm_head(key, cfg):
+    if cfg.tie_embeddings:
+        return {}
+    vp = cfg.padded_vocab()
+    return {"lm_head": dense_init(key, (cfg.d_model, vp), 0, pdtype(cfg))}
+
+
+def lm_logits(head_p, embed_p, h, cfg):
+    if cfg.tie_embeddings:
+        return jnp.einsum("...d,vd->...v", h, embed_p["embedding"])
+    return jnp.einsum("...d,dv->...v", h, head_p["lm_head"])
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]

@@ -1,0 +1,161 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (B, n_frames, d_model). The encoder
+is bidirectional; the decoder is causal with per-layer cross-attention whose
+K/V are computed once from encoder output and cached for decode.
+Positions: sinusoidal (encoder), learned (decoder); no RoPE.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import ffn
+from repro.models.common import (
+    apply_norm, embed_init, embed_tokens, init_embedding, init_norm,
+    lm_logits, pdtype, sinusoidal_positions)
+from repro.serve import kvcache
+
+
+def _init_enc_layer(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {"ln1": init_norm(cfg), "attn": attn.init_gqa(ks[0], cfg),
+            "ln2": init_norm(cfg), "mlp": ffn.init_mlp(ks[1], cfg)}
+
+
+def _init_dec_layer(key, cfg):
+    ks = jax.random.split(key, 3)
+    return {"ln1": init_norm(cfg), "self_attn": attn.init_gqa(ks[0], cfg),
+            "ln_x": init_norm(cfg), "cross_attn": attn.init_gqa(ks[1], cfg),
+            "ln2": init_norm(cfg), "mlp": ffn.init_mlp(ks[2], cfg)}
+
+
+def init_encdec(key, cfg):
+    enc_l = cfg.encoder.n_layers
+    ks = jax.random.split(key, enc_l + cfg.n_layers + 3)
+    stack = lambda xs: jax.tree.map(lambda *y: jnp.stack(y), *xs)
+    return {
+        "embed": init_embedding(ks[0], cfg),
+        "dec_pos": embed_init(ks[1], (cfg.max_seq_len, cfg.d_model),
+                              pdtype(cfg)),
+        "enc_layers": stack([_init_enc_layer(ks[2 + i], cfg)
+                             for i in range(enc_l)]),
+        "enc_norm": init_norm(cfg),
+        "dec_layers": stack([_init_dec_layer(ks[2 + enc_l + i], cfg)
+                             for i in range(cfg.n_layers)]),
+        "final_norm": init_norm(cfg),
+    }
+
+
+def encode(params, enc_frames, cfg, remat_policy="full"):
+    h = enc_frames.astype(pdtype(cfg))
+    h = h + sinusoidal_positions(h.shape[1], cfg.d_model).astype(h.dtype)
+    lo = attn.layout_from_cfg(cfg)
+
+    def body(carry, lp):
+        ain = apply_norm(lp["ln1"], carry, cfg)
+        q, k, v = attn.gqa_qkv(lp["attn"], ain, cfg)
+        ctx = attn.sdpa(q, k, v, causal=False, gp=lo.gp)
+        h2 = carry + attn.gqa_out(lp["attn"], ctx, cfg)
+        h2 = h2 + ffn.apply_mlp(lp["mlp"], apply_norm(lp["ln2"], h2, cfg),
+                                cfg)
+        return h2, None
+
+    fn = jax.checkpoint(body) if remat_policy != "none" else body
+    h, _ = jax.lax.scan(fn, h, params["enc_layers"])
+    return apply_norm(params["enc_norm"], h, cfg)
+
+
+def _dec_block(lp, h, enc_out, cfg, *, self_cache=None, cross_kv=None,
+               pos=None, collect=False):
+    lo = attn.layout_from_cfg(cfg)
+    ain = apply_norm(lp["ln1"], h, cfg)
+    q, k, v = attn.gqa_qkv(lp["self_attn"], ain, cfg)
+    new_self = collected = None
+    if self_cache is not None:
+        new_self = kvcache.write_kv_layer(self_cache, k, v, pos)
+        kf, vf = kvcache.read_kv_layer(new_self, h.dtype)
+        k_valid = jnp.arange(kf.shape[1])[None] <= pos[:, None]
+        ctx = attn.sdpa(q, kf, vf, causal=False, k_valid=k_valid, gp=lo.gp)
+    else:
+        ctx = attn.sdpa(q, k, v, causal=True, gp=lo.gp)
+        if collect:
+            collected = {"k": k, "v": v}
+    h = h + attn.gqa_out(lp["self_attn"], ctx, cfg)
+
+    xin = apply_norm(lp["ln_x"], h, cfg)
+    if cross_kv is not None:
+        kx, vx = cross_kv
+        qx = jnp.einsum("bsd,dh->bsh", xin, lp["cross_attn"]["wq"])
+        if "bq" in lp["cross_attn"]:
+            qx = qx + lp["cross_attn"]["bq"]
+        qx = qx.reshape(*xin.shape[:2], lo.hp, cfg.head_dim)
+    else:
+        qx, kx, vx = attn.gqa_qkv(lp["cross_attn"], xin, cfg, kv_x=enc_out)
+    ctx_x = attn.sdpa(qx, kx, vx, causal=False, gp=lo.gp)
+    h = h + attn.gqa_out(lp["cross_attn"], ctx_x, cfg)
+
+    h = h + ffn.apply_mlp(lp["mlp"], apply_norm(lp["ln2"], h, cfg), cfg)
+    cross_coll = {"k": kx, "v": vx} if (collect and cross_kv is None) else None
+    return h, collected, cross_coll, new_self
+
+
+def forward(params, batch, cfg, *, remat_policy="full", collect_cache=False,
+            logits_last_only=False, **_):
+    enc_out = encode(params, batch["enc_frames"], cfg, remat_policy)
+    tokens = batch["tokens"]
+    h = embed_tokens(params["embed"], tokens, cfg).astype(pdtype(cfg))
+    h = h + params["dec_pos"][None, :tokens.shape[1]]
+
+    def body(carry, lp):
+        out, coll, cross, _ = _dec_block(lp, carry, enc_out, cfg,
+                                         collect=collect_cache)
+        ys = {"self": coll, "cross": cross} if collect_cache else {}
+        return out, ys
+
+    fn = jax.checkpoint(body) if remat_policy != "none" else body
+    h, ys = jax.lax.scan(fn, h, params["dec_layers"])
+    if logits_last_only:
+        h = h[:, -1:]
+    h = apply_norm(params["final_norm"], h, cfg)
+    logits = lm_logits(params, params["embed"], h, cfg)
+    return logits, jnp.float32(0), (ys if collect_cache else None)
+
+
+def prefill(params, batch, cfg, *, kv_dtype="bfloat16", last_only=False,
+            **_):
+    logits, _, pieces = forward(params, batch, cfg, remat_policy="none",
+                                collect_cache=True,
+                                logits_last_only=last_only)
+    b, s = batch["tokens"].shape
+    cache_dt = jnp.bfloat16 if kv_dtype == "int8" else jnp.dtype(kv_dtype)
+    cache = {
+        "pos": jnp.full((b,), s, jnp.int32),
+        "self": jax.tree.map(lambda x: x.astype(cache_dt), pieces["self"]),
+        "cross": jax.tree.map(lambda x: x.astype(cache_dt),
+                              pieces["cross"]),
+    }
+    return logits[:, -1], cache
+
+
+def decode_step(params, cache, batch, cfg, **_):
+    tokens = batch["tokens"]
+    pos = cache["pos"]
+    h = embed_tokens(params["embed"], tokens, cfg).astype(pdtype(cfg))
+    h = h + jnp.take(params["dec_pos"], pos, axis=0)[:, None]
+
+    def body(carry, xs):
+        lp, self_c, cross_c = xs
+        kx, vx = kvcache.read_kv_layer(cross_c, carry.dtype)
+        out, _, _, new_self = _dec_block(lp, carry, None, cfg,
+                                         self_cache=self_c,
+                                         cross_kv=(kx, vx), pos=pos)
+        return out, new_self
+
+    h, new_self = jax.lax.scan(
+        body, h, (params["dec_layers"], cache["self"], cache["cross"]))
+    h = apply_norm(params["final_norm"], h, cfg)
+    logits = lm_logits(params, params["embed"], h, cfg)
+    return logits[:, -1], {**cache, "self": new_self, "pos": pos + 1}

@@ -1,0 +1,46 @@
+"""config -> Model: uniform init/forward/prefill/decode across families."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec, transformer
+from repro.serve import kvcache
+
+
+class Model(NamedTuple):
+    cfg: ArchConfig
+    init: Callable[..., Any]
+    forward: Callable[..., Any]      # (params, batch, **opt) -> (logits, aux, cache|None)
+    prefill: Callable[..., Any]      # (params, batch, **opt) -> (logits, cache)
+    decode: Callable[..., Any]       # (params, cache, batch, **opt) -> (logits, cache)
+    init_cache: Callable[..., Any]   # (batch, seq, kv_dtype) -> cache
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.family == "audio":
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec.init_encdec(key, cfg),
+            forward=lambda p, b, **kw: encdec.forward(p, b, cfg, **kw),
+            prefill=lambda p, b, **kw: encdec.prefill(p, b, cfg, **kw),
+            decode=lambda p, c, b, **kw: encdec.decode_step(p, c, b, cfg,
+                                                            **kw),
+            init_cache=lambda batch, seq, kv_dtype="bfloat16":
+                kvcache.init_cache(cfg, batch, seq, kv_dtype),
+        )
+    return Model(
+        cfg=cfg,
+        init=lambda key: transformer.init_decoder(key, cfg),
+        forward=lambda p, b, **kw: transformer.forward(p, b, cfg, **kw),
+        prefill=lambda p, b, **kw: transformer.prefill(p, b, cfg, **kw),
+        decode=lambda p, c, b, **kw: transformer.decode_step(p, c, b, cfg,
+                                                             **kw),
+        init_cache=lambda batch, seq, kv_dtype="bfloat16":
+            kvcache.init_cache(cfg, batch, seq, kv_dtype),
+    )
+
+
+def count_params(params) -> int:
+    import jax
+    return sum(x.size for x in jax.tree.leaves(params))

@@ -1,0 +1,223 @@
+"""Mamba-2 (SSD — state-space duality) block, chunked, TPU-friendly.
+
+Layout follows the Mamba-2 reference: in_proj -> [z | x | B | C | dt],
+depthwise causal conv over (x,B,C), SiLU, chunked SSD recurrence, gated
+RMSNorm, out_proj. The projections are *split into separate weights* (w_z,
+w_x, w_b, w_c, w_dt and conv_x/conv_b/conv_c) — algebraically identical to
+the fused layouts (depthwise conv has no cross-channel mixing) but each
+piece then carries its own clean PartitionSpec (DESIGN.md §5).
+
+TP head padding: SSM heads are padded like attention heads; padded-head
+outputs are zero-masked before the gated norm and the norm denominator uses
+the TRUE channel count, so numerics match the unpadded model exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, pdtype
+
+
+def init_ssm(key, cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    din = cfg.d_inner_padded
+    hp = cfg.ssm_heads_padded
+    gn = s.n_groups * s.d_state
+    ks = jax.random.split(key, 11)
+    dt = pdtype(cfg)
+    kconv = s.d_conv
+
+    def conv_w(k, ch):
+        return (jax.random.uniform(k, (ch, kconv), jnp.float32,
+                                   -1.0, 1.0) / kconv).astype(dt)
+
+    a = jax.random.uniform(ks[7], (hp,), jnp.float32,
+                           cfg.ssm.a_init_range[0], cfg.ssm.a_init_range[1])
+    dt0 = jnp.exp(jax.random.uniform(ks[8], (hp,), jnp.float32)
+                  * (jnp.log(s.dt_max) - jnp.log(s.dt_min))
+                  + jnp.log(s.dt_min))
+    dt0 = jnp.clip(dt0, 1e-4, None)
+    return {
+        "w_z": dense_init(ks[0], (d, din), 0, dt),
+        "w_x": dense_init(ks[1], (d, din), 0, dt),
+        "w_b": dense_init(ks[2], (d, gn), 0, dt),
+        "w_c": dense_init(ks[3], (d, gn), 0, dt),
+        "w_dt": dense_init(ks[4], (d, hp), 0, dt),
+        "conv_x": conv_w(ks[5], din), "conv_x_b": jnp.zeros((din,), dt),
+        "conv_b": conv_w(ks[6], gn), "conv_b_b": jnp.zeros((gn,), dt),
+        "conv_c": conv_w(ks[9], gn), "conv_c_b": jnp.zeros((gn,), dt),
+        "a_log": jnp.log(a),                       # A = -exp(a_log)
+        "dt_bias": jnp.log(jnp.expm1(dt0)),        # softplus inverse
+        "d_skip": jnp.ones((hp,), jnp.float32),
+        "norm_scale": jnp.ones((din,), dt),
+        "w_out": dense_init(ks[10], (din, d), 0, dt),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x (B,S,ch), w (ch,K). If ``state`` (B,ch,K-1)
+    is given (decode), x is (B,1,ch) and the updated state is returned."""
+    k = w.shape[1]
+    if state is None:
+        pads = [jnp.pad(x, ((0, 0), (k - 1 - i, 0), (0, 0)))[:, :x.shape[1]]
+                for i in range(k)]
+        out = sum(p * w[None, None, :, i] for i, p in enumerate(pads))
+        return out + b, None
+    window = jnp.concatenate([state, x.transpose(0, 2, 1)], axis=2)  # (B,ch,K)
+    out = jnp.sum(window * w[None], axis=2)[:, None, :] + b
+    return out, window[:, :, 1:]
+
+
+def _segsum_decay(da_cum):
+    """da_cum (..., L) -> lower-triangular exp(da_cum[i]-da_cum[j]) i>=j.
+    Mask BEFORE exp: the upper triangle has positive exponents that
+    overflow to inf and poison the where-gradient (0 * inf = NaN)."""
+    li = da_cum[..., :, None] - da_cum[..., None, :]
+    mask = jnp.tril(jnp.ones(li.shape[-2:], bool))
+    return jnp.exp(jnp.where(mask, li, -jnp.inf))
+
+
+def ssd_chunked(x, dtv, a, bmat, cmat, chunk, initial_state=None):
+    """SSD over a full sequence, chunked.
+    x (B,S,H,P) head inputs; dtv (B,S,H) positive step sizes; a (H,)
+    negative decay; bmat/cmat (B,S,N) (n_groups==1, shared across heads).
+    Returns y (B,S,H,P) float32 and final state (B,H,P,N) float32."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    l = min(chunk, s)
+    assert s % l == 0, (s, l)
+    nc = s // l
+    xf = x.astype(jnp.float32).reshape(b, nc, l, h, p)
+    dtf = dtv.astype(jnp.float32).reshape(b, nc, l, h)
+    bf = bmat.astype(jnp.float32).reshape(b, nc, l, n)
+    cf = cmat.astype(jnp.float32).reshape(b, nc, l, n)
+
+    da = dtf * a[None, None, None, :]                      # (b,nc,l,h) <= 0
+    da_cum = jnp.cumsum(da, axis=2)
+    xdt = xf * dtf[..., None]
+
+    # intra-chunk (the "attention-like" quadratic-in-l term)
+    cb = jnp.einsum("bcln,bcsn->bcls", cf, bf)             # shared over h
+    decay = _segsum_decay(da_cum.transpose(0, 1, 3, 2))    # (b,nc,h,l,l)
+    y_diag = jnp.einsum("bcls,bchls,bcshp->bclhp",
+                        cb, decay, xdt)
+
+    # chunk -> state contributions
+    decay_to_end = jnp.exp(da_cum[:, :, -1:, :] - da_cum)  # (b,nc,l,h)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", bf, decay_to_end, xdt)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(da_cum[:, :, -1, :])             # (b,nc,h)
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[:, :, None, None] + st
+        return new, carry                                  # emit ENTERING state
+
+    final, states_in = jax.lax.scan(
+        step, s0, (states.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)))
+    states_in = states_in.transpose(1, 0, 2, 3, 4)         # (b,nc,h,p,n)
+
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp",
+                       cf, states_in, jnp.exp(da_cum))
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final
+
+
+def ssd_decode(x, dtv, a, bmat, cmat, state):
+    """Single-token SSD update. x (B,1,H,P); state (B,H,P,N) float32."""
+    xf = x.astype(jnp.float32)[:, 0]                       # (B,H,P)
+    dtf = dtv.astype(jnp.float32)[:, 0]                    # (B,H)
+    bf = bmat.astype(jnp.float32)[:, 0]                    # (B,N)
+    cf = cmat.astype(jnp.float32)[:, 0]
+    da = jnp.exp(dtf * a[None, :])                         # (B,H)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dtf, bf, xf)
+    new_state = state * da[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, cf)
+    return y[:, None], new_state                           # (B,1,H,P)
+
+
+def _gated_norm(y, z, scale, true_dim: int, eps: float):
+    """RMSNorm(y * silu(z)) with the denominator using the TRUE channel
+    count so zero-padded channels do not perturb real outputs."""
+    g = (y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32)))
+    ms = jnp.sum(g * g, axis=-1, keepdims=True) / true_dim
+    return (g * jax.lax.rsqrt(ms + eps)) * scale.astype(jnp.float32)
+
+
+def apply_ssm(p, x, cfg, cache=None, collect_state: bool = False):
+    """Full-sequence when cache is None; single-token decode otherwise.
+    cache = {"conv_x","conv_b","conv_c","state"}. Returns (out, new_cache).
+    collect_state=True (prefill): new_cache carries the decode-ready state
+    (conv windows over the last K-1 raw projected inputs + final SSD state).
+    """
+    s = cfg.ssm
+    b, seqlen, _ = x.shape
+    hp, hd = cfg.ssm_heads_padded, s.head_dim
+    h_true = cfg.ssm_heads
+
+    z = jnp.einsum("bsd,di->bsi", x, p["w_z"])
+    xi = jnp.einsum("bsd,di->bsi", x, p["w_x"])
+    bi = jnp.einsum("bsd,dn->bsn", x, p["w_b"])
+    ci = jnp.einsum("bsd,dn->bsn", x, p["w_c"])
+    dtv = jnp.einsum("bsd,dh->bsh", x, p["w_dt"])
+    dtv = jax.nn.softplus(dtv.astype(jnp.float32)
+                          + p["dt_bias"][None, None].astype(jnp.float32))
+
+    decode = cache is not None
+    k1 = s.d_conv - 1
+    raw_windows = None
+    if collect_state:
+        raw_windows = (xi[:, -k1:].transpose(0, 2, 1),
+                       bi[:, -k1:].transpose(0, 2, 1),
+                       ci[:, -k1:].transpose(0, 2, 1))
+    xi, conv_x = _causal_conv(xi, p["conv_x"], p["conv_x_b"],
+                              cache["conv_x"] if decode else None)
+    bi, conv_b = _causal_conv(bi, p["conv_b"], p["conv_b_b"],
+                              cache["conv_b"] if decode else None)
+    ci, conv_c = _causal_conv(ci, p["conv_c"], p["conv_c_b"],
+                              cache["conv_c"] if decode else None)
+    xi, bi, ci = jax.nn.silu(xi), jax.nn.silu(bi), jax.nn.silu(ci)
+
+    xh = xi.reshape(b, seqlen, hp, hd)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    if decode:
+        y, state = ssd_decode(xh, dtv, a, bi, ci, cache["state"])
+    else:
+        y, state = ssd_chunked(xh, dtv, a, bi, ci, s.chunk_size)
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+
+    if hp != h_true:  # zero padded heads before the coupling norm
+        mask = (jnp.arange(hp) < h_true).astype(jnp.float32)
+        y = y * mask[None, None, :, None]
+    y = y.reshape(b, seqlen, hp * hd)
+    y = _gated_norm(y, z, p["norm_scale"], true_dim=h_true * hd,
+                    eps=cfg.norm_eps).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, p["w_out"])
+    if decode:
+        new_cache = dict(conv_x=conv_x, conv_b=conv_b, conv_c=conv_c,
+                         state=state)
+    elif collect_state:
+        new_cache = dict(conv_x=raw_windows[0], conv_b=raw_windows[1],
+                         conv_c=raw_windows[2], state=state)
+    else:
+        new_cache = None
+    return out, new_cache
+
+
+def init_ssm_cache(cfg, batch: int, dtype=jnp.float32):
+    s = cfg.ssm
+    k = s.d_conv - 1
+    gn = s.n_groups * s.d_state
+    return dict(
+        conv_x=jnp.zeros((batch, cfg.d_inner_padded, k), dtype),
+        conv_b=jnp.zeros((batch, gn, k), dtype),
+        conv_c=jnp.zeros((batch, gn, k), dtype),
+        state=jnp.zeros((batch, cfg.ssm_heads_padded, s.head_dim, s.d_state),
+                        jnp.float32),
+    )

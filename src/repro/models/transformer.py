@@ -1,0 +1,352 @@
+"""Decoder-only model assembly for dense / moe / vlm / ssm / hybrid
+families. Layer stacks run under ``jax.lax.scan`` over stacked params
+(compile-time O(1) in depth); the hybrid (zamba2) family unrolls into
+[6-SSM-layer scan -> shared-attention block] segments so the shared block's
+KV cache is handled at the python level.
+
+Three entry points, shared by training and serving:
+  forward(params, batch)          -> (logits (B,S,Vp), aux)
+  prefill(params, batch)          -> (last_logits (B,Vp), cache)
+  decode_step(params, cache, tok) -> (logits (B,Vp), cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import ffn
+from repro.models import ssm as ssm_mod
+from repro.models.common import (
+    apply_norm, dense_init, embed_tokens, init_embedding, init_lm_head,
+    init_norm, lm_logits, mrope_for_heads, pdtype, rope_for_heads)
+from repro.serve import kvcache
+
+
+# ------------------------------------------------------------------ init ---
+def _init_dense_layer(key, cfg):
+    ks = jax.random.split(key, 4)
+    p = {"ln1": init_norm(cfg), "ln2": init_norm(cfg)}
+    p["attn"] = (attn.init_mla(ks[0], cfg) if cfg.mla is not None
+                 else attn.init_gqa(ks[0], cfg))
+    if cfg.moe is not None:
+        p["moe"] = ffn.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = ffn.init_mlp(ks[1], cfg)
+    return p
+
+
+def _init_ssm_layer(key, cfg):
+    return {"ln1": init_norm(cfg), "ssm": ssm_mod.init_ssm(key, cfg)}
+
+
+def _stack(layers):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+
+def init_decoder(key, cfg):
+    ks = jax.random.split(key, cfg.n_layers + 4)
+    p: dict[str, Any] = {"embed": init_embedding(ks[0], cfg),
+                         "final_norm": init_norm(cfg)}
+    p.update(init_lm_head(ks[1], cfg))
+    if cfg.family in ("dense", "moe", "vlm"):
+        p["layers"] = _stack([_init_dense_layer(ks[3 + i], cfg)
+                              for i in range(cfg.n_layers)])
+    elif cfg.family == "ssm":
+        p["layers"] = _stack([_init_ssm_layer(ks[3 + i], cfg)
+                              for i in range(cfg.n_layers)])
+    elif cfg.family == "hybrid":
+        p["layers"] = _stack([_init_ssm_layer(ks[3 + i], cfg)
+                              for i in range(cfg.n_layers)])
+        p["shared"] = _init_dense_layer(ks[2], cfg)  # ONE block, reused
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+# ------------------------------------------------------------ rope setup ---
+def _make_rope(cfg, positions, mrope_positions=None):
+    """-> (cos, sin) shaped (B, S, 1, rot/2) or None (whisper-style)."""
+    if not cfg.uses_attention:
+        return None
+    if cfg.rope_theta == 0.0:
+        return None
+    rot = (cfg.mla.qk_rope_head_dim if cfg.mla is not None else cfg.head_dim)
+    if cfg.vision is not None and mrope_positions is not None:
+        return mrope_for_heads(mrope_positions, rot, cfg.rope_theta,
+                               cfg.vision.mrope_sections)
+    return rope_for_heads(positions, rot, cfg.rope_theta)
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+# ----------------------------------------------------- dense-family body ---
+def _dense_block(lp, h, cfg, rope, *, chunk, moe_groups, cache_slice=None,
+                 pos=None):
+    """One transformer block. cache_slice given => decode (S==1)."""
+    cos, sin = (rope if rope is not None else (None, None))
+    ain = apply_norm(lp["ln1"], h, cfg)
+    new_cache = None
+    collected = None
+    if cfg.mla is not None:
+        if cache_slice is not None:
+            c_kv_new, k_rope_new = attn.mla_latent_kv(lp["attn"], ain, cfg,
+                                                      cos, sin)
+            bidx = jnp.arange(h.shape[0])
+            c_kv = cache_slice["c_kv"].at[bidx, pos].set(
+                c_kv_new[:, 0].astype(cache_slice["c_kv"].dtype))
+            k_rope = cache_slice["k_rope"].at[bidx, pos].set(
+                k_rope_new[:, 0].astype(cache_slice["k_rope"].dtype))
+            k_valid = jnp.arange(c_kv.shape[1])[None] <= pos[:, None]
+            aout = attn.mla_attention_decode(
+                lp["attn"], ain, cfg, cos, sin,
+                c_kv.astype(h.dtype), k_rope.astype(h.dtype), k_valid)
+            new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+        else:
+            aout, (c_kv, k_rope) = attn.mla_attention_full(
+                lp["attn"], ain, cfg, cos, sin, chunk=chunk)
+            collected = {"c_kv": c_kv, "k_rope": k_rope}
+    else:
+        lo = attn.layout_from_cfg(cfg)
+        rope4 = None if cos is None else (cos, sin, cos, sin)
+        q, k, v = attn.gqa_qkv(lp["attn"], ain, cfg, rope=rope4)
+        if cache_slice is not None:
+            new_cache = kvcache.write_kv_layer(cache_slice, k, v, pos)
+            kf, vf = kvcache.read_kv_layer(new_cache, h.dtype)
+            k_valid = jnp.arange(kf.shape[1])[None] <= pos[:, None]
+            ctx = attn.sdpa(q, kf, vf, causal=False, k_valid=k_valid,
+                            gp=lo.gp)
+        else:
+            if chunk and h.shape[1] > chunk:
+                ctx = attn.chunked_sdpa(q, k, v, causal=True, chunk=chunk,
+                                        gp=lo.gp)
+            else:
+                ctx = attn.sdpa(q, k, v, causal=True, gp=lo.gp)
+            collected = {"k": k, "v": v}
+        aout = attn.gqa_out(lp["attn"], ctx, cfg)
+    h = h + aout
+    fin = apply_norm(lp["ln2"], h, cfg)
+    if cfg.moe is not None:
+        mout, aux = ffn.apply_moe(lp["moe"], fin, cfg, moe_groups)
+    else:
+        mout, aux = ffn.apply_mlp(lp["mlp"], fin, cfg), jnp.float32(0)
+    return h + mout, aux, collected, new_cache
+
+
+# ------------------------------------------------------------- forward -----
+def _embed_input(params, batch, cfg):
+    h = embed_tokens(params["embed"], batch["tokens"], cfg).astype(pdtype(cfg))
+    ve = batch.get("vision_embeds")
+    if ve is not None:  # VLM stub: patch embeddings replace the prefix
+        h = jnp.concatenate([ve.astype(h.dtype), h[:, ve.shape[1]:]], axis=1)
+    return h
+
+
+def forward(params, batch, cfg, *, remat_policy="full", attn_chunk=0,
+            moe_groups=1, collect_cache=False, logits_last_only=False):
+    """Full-sequence pass. Returns (logits, aux, cache_pieces|None).
+    logits_last_only: compute the LM head on the final position only
+    (prefill optimization — decode needs just one next-token
+    distribution; saves T x V logit compute/memory/collectives)."""
+    h = _embed_input(params, batch, cfg)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    rope = _make_rope(cfg, positions, batch.get("mrope_positions"))
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(carry, lp):
+            out, aux, coll, _ = _dense_block(
+                lp, carry, cfg, rope, chunk=attn_chunk,
+                moe_groups=moe_groups)
+            ys = {"aux": aux}
+            if collect_cache:
+                ys["cache"] = coll
+            return out, ys
+        h, ys = jax.lax.scan(_remat(body, remat_policy), h, params["layers"])
+        aux = jnp.sum(ys["aux"])
+        cache_pieces = ys.get("cache")
+    elif cfg.family == "ssm":
+        def body(carry, lp):
+            out, st = ssm_mod.apply_ssm(
+                lp["ssm"], apply_norm(lp["ln1"], carry, cfg), cfg,
+                collect_state=collect_cache)
+            ys = {"st": st} if collect_cache else {}
+            return carry + out, ys
+        h, ys = jax.lax.scan(_remat(body, remat_policy), h, params["layers"])
+        aux = jnp.float32(0)
+        cache_pieces = ys.get("st")
+    elif cfg.family == "hybrid":
+        h, aux, cache_pieces = _hybrid_forward(
+            params, h, cfg, rope, remat_policy=remat_policy,
+            attn_chunk=attn_chunk, collect_cache=collect_cache)
+    else:
+        raise ValueError(cfg.family)
+
+    if logits_last_only:
+        h = h[:, -1:]
+    h = apply_norm(params["final_norm"], h, cfg)
+    logits = lm_logits(params, params["embed"], h, cfg)
+    return logits, aux, cache_pieces
+
+
+def hybrid_segments(cfg):
+    """[(n_ssm_layers, has_shared_attn_after), ...]."""
+    every = cfg.hybrid_attn_every
+    segs = []
+    done = 0
+    while done < cfg.n_layers:
+        n = min(every, cfg.n_layers - done)
+        done += n
+        segs.append((n, n == every))
+    return segs
+
+
+def _tree_slice(tree, lo, hi):
+    return jax.tree.map(lambda x: x[lo:hi], tree)
+
+
+def _hybrid_forward(params, h, cfg, rope, *, remat_policy, attn_chunk,
+                    collect_cache):
+    def ssm_body(carry, lp):
+        out, st = ssm_mod.apply_ssm(
+            lp["ssm"], apply_norm(lp["ln1"], carry, cfg), cfg,
+            collect_state=collect_cache)
+        return carry + out, ({"st": st} if collect_cache else {})
+
+    ssm_states, shared_kv = [], []
+    lo_i = 0
+    for n, has_attn in hybrid_segments(cfg):
+        seg = _tree_slice(params["layers"], lo_i, lo_i + n)
+        lo_i += n
+        h, ys = jax.lax.scan(_remat(ssm_body, remat_policy), h, seg)
+        if collect_cache:
+            ssm_states.append(ys["st"])
+        if has_attn:
+            h, _, coll, _ = _dense_block(params["shared"], h, cfg, rope,
+                                         chunk=attn_chunk, moe_groups=1)
+            if collect_cache:
+                shared_kv.append(coll)
+    cache_pieces = None
+    if collect_cache:
+        ssm_all = jax.tree.map(lambda *xs: jnp.concatenate(xs), *ssm_states)
+        kv_all = (jax.tree.map(lambda *xs: jnp.stack(xs), *shared_kv)
+                  if shared_kv else None)
+        cache_pieces = {"ssm": ssm_all, "shared": kv_all}
+    return h, jnp.float32(0), cache_pieces
+
+
+# -------------------------------------------------------------- prefill ----
+def prefill(params, batch, cfg, *, attn_chunk=0, kv_dtype="bfloat16",
+            moe_groups=1, last_only=False):
+    """Returns (last-token logits (B,Vp), decode-ready cache)."""
+    logits, _, pieces = forward(params, batch, cfg, remat_policy="none",
+                                attn_chunk=attn_chunk, moe_groups=moe_groups,
+                                collect_cache=True,
+                                logits_last_only=last_only)
+    b, s = batch["tokens"].shape
+    cache: dict = {"pos": jnp.full((b,), s, jnp.int32)}
+    cache_dt = jnp.bfloat16 if kv_dtype == "int8" else jnp.dtype(kv_dtype)
+    if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.mla is not None:
+            cache["mla"] = {
+                "c_kv": pieces["c_kv"].astype(cache_dt),
+                "k_rope": pieces["k_rope"].astype(cache_dt)}
+        else:
+            if kv_dtype == "int8":
+                kq, ks_ = kvcache._q8(pieces["k"])
+                vq, vs_ = kvcache._q8(pieces["v"])
+                cache["kv"] = {"k": kq, "v": vq, "k_scale": ks_,
+                               "v_scale": vs_}
+            else:
+                cache["kv"] = {
+                    "k": pieces["k"].astype(jnp.dtype(kv_dtype)),
+                    "v": pieces["v"].astype(jnp.dtype(kv_dtype))}
+    elif cfg.family == "ssm":
+        cache["ssm"] = pieces
+    elif cfg.family == "hybrid":
+        cache["ssm"] = pieces["ssm"]
+        if pieces["shared"] is not None:
+            cache["shared_attn"] = {
+                "k": pieces["shared"]["k"].astype(cache_dt),
+                "v": pieces["shared"]["v"].astype(cache_dt)}
+    return logits[:, -1], cache
+
+
+# ---------------------------------------------------------------- decode ---
+def decode_step(params, cache, batch, cfg, *, moe_groups=1):
+    """One token: batch["tokens"] (B,1). Returns (logits (B,Vp), cache)."""
+    h = _embed_input(params, batch, cfg)
+    pos = cache["pos"]                                  # (B,) write index
+    mp = batch.get("mrope_positions")
+    rope = _make_rope(cfg, pos[:, None], mp)
+
+    new_cache = dict(cache)
+    if cfg.family in ("dense", "moe", "vlm"):
+        layer_cache = cache["mla"] if cfg.mla is not None else cache["kv"]
+
+        def body(carry, xs):
+            lp, lc = xs
+            out, _, _, nc = _dense_block(lp, carry, cfg, rope,
+                                         chunk=0, moe_groups=moe_groups,
+                                         cache_slice=lc, pos=pos)
+            return out, nc
+        h, upd = jax.lax.scan(body, h, (params["layers"], layer_cache))
+        new_cache["mla" if cfg.mla is not None else "kv"] = upd
+    elif cfg.family == "ssm":
+        def body(carry, xs):
+            lp, lc = xs
+            out, nc = ssm_mod.apply_ssm(
+                lp["ssm"], apply_norm(lp["ln1"], carry, cfg), cfg, cache=lc)
+            return carry + out, nc
+        h, upd = jax.lax.scan(body, h, (params["layers"], cache["ssm"]))
+        new_cache["ssm"] = upd
+    elif cfg.family == "hybrid":
+        h, new_cache = _hybrid_decode(params, h, cache, cfg, rope, pos,
+                                      new_cache)
+    else:
+        raise ValueError(cfg.family)
+
+    h = apply_norm(params["final_norm"], h, cfg)
+    logits = lm_logits(params, params["embed"], h, cfg)
+    new_cache["pos"] = pos + 1
+    return logits[:, -1], new_cache
+
+
+def _hybrid_decode(params, h, cache, cfg, rope, pos, new_cache):
+    def ssm_body(carry, xs):
+        lp, lc = xs
+        out, nc = ssm_mod.apply_ssm(
+            lp["ssm"], apply_norm(lp["ln1"], carry, cfg), cfg, cache=lc)
+        return carry + out, nc
+
+    ssm_upds, kv_upds = [], []
+    lo_i = inv = 0
+    for n, has_attn in hybrid_segments(cfg):
+        seg = _tree_slice(params["layers"], lo_i, lo_i + n)
+        seg_cache = _tree_slice(cache["ssm"], lo_i, lo_i + n)
+        lo_i += n
+        h, upd = jax.lax.scan(ssm_body, h, (seg, seg_cache))
+        ssm_upds.append(upd)
+        if has_attn:
+            lc = jax.tree.map(lambda x: x[inv], cache["shared_attn"])
+            inv += 1
+            h, _, _, nc = _dense_block(params["shared"], h, cfg, rope,
+                                       chunk=0, moe_groups=1,
+                                       cache_slice=lc, pos=pos)
+            kv_upds.append(nc)
+    new_cache["ssm"] = jax.tree.map(lambda *xs: jnp.concatenate(xs),
+                                    *ssm_upds)
+    if kv_upds:
+        new_cache["shared_attn"] = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                                *kv_upds)
+    return h, new_cache

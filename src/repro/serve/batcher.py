@@ -1,0 +1,68 @@
+"""Request batching for serving (paper-kind: inference over a corpus /
+request stream). Size-or-deadline batching with fixed TPU-friendly batch
+shapes (pad-to-capacity), plus simple latency accounting for tests and
+the serve_cascade example."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+
+@dataclass
+class Request:
+    rid: int
+    payload: Any
+    t_arrival: float = 0.0
+    result: Any = None
+    t_done: float = 0.0
+
+
+@dataclass
+class BatcherStats:
+    batches: int = 0
+    padded_slots: int = 0
+    latencies: list = field(default_factory=list)
+
+
+class Batcher:
+    """Collects requests; flushes when ``batch_size`` are waiting or the
+    oldest request exceeds ``max_wait_s`` (checked on submit/flush)."""
+
+    def __init__(self, run_batch: Callable[[list], list], batch_size: int,
+                 max_wait_s: float = 0.01, clock=time.perf_counter):
+        self.run_batch = run_batch
+        self.batch_size = batch_size
+        self.max_wait_s = max_wait_s
+        self.clock = clock
+        self.pending: list[Request] = []
+        self.stats = BatcherStats()
+
+    def submit(self, req: Request):
+        req.t_arrival = self.clock()
+        self.pending.append(req)
+        if len(self.pending) >= self.batch_size:
+            self._flush()
+
+    def poll(self):
+        if self.pending and \
+                self.clock() - self.pending[0].t_arrival >= self.max_wait_s:
+            self._flush()
+
+    def drain(self):
+        while self.pending:
+            self._flush()
+
+    def _flush(self):
+        batch = self.pending[: self.batch_size]
+        self.pending = self.pending[self.batch_size:]
+        pad = self.batch_size - len(batch)
+        payloads = [r.payload for r in batch] + [batch[-1].payload] * pad
+        results = self.run_batch(payloads)
+        now = self.clock()
+        for r, res in zip(batch, results):
+            r.result = res
+            r.t_done = now
+            self.stats.latencies.append(now - r.t_arrival)
+        self.stats.batches += 1
+        self.stats.padded_slots += pad

@@ -1,0 +1,138 @@
+"""Continuous (slot-based) batching for decode serving.
+
+The decode step always runs at a FIXED batch of ``n_slots`` (TPU-friendly
+static shapes). Requests stream in with different prompt lengths and
+generation budgets; finished slots are immediately refilled from the
+queue instead of waiting for the whole batch to drain — the standard
+production serving discipline (vLLM-style, without paging here; the KV
+capacity is the per-slot max length).
+
+The engine is model-agnostic: it drives the public Model API via a
+prefill-one/decode-batch pair and keeps per-slot caches merged into the
+batched cache tree.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class GenRequest:
+    rid: int
+    prompt: np.ndarray           # (S,) int32
+    max_new: int
+    out: list = field(default_factory=list)
+    done: bool = False
+    t_enqueued: float = 0.0
+    t_done: float = 0.0
+
+
+@dataclass
+class EngineStats:
+    steps: int = 0
+    slot_occupancy: list = field(default_factory=list)
+    finished: int = 0
+
+    @property
+    def mean_occupancy(self) -> float:
+        return float(np.mean(self.slot_occupancy)) if self.slot_occupancy \
+            else 0.0
+
+
+class ContinuousBatcher:
+    """model: factory Model; capacity: per-slot KV capacity (max prompt +
+    max_new must fit)."""
+
+    def __init__(self, model, params, n_slots: int, capacity: int,
+                 kv_dtype: str = "bfloat16", eos_token: int | None = None):
+        self.model = model
+        self.params = params
+        self.n = n_slots
+        self.cap = capacity
+        self.eos = eos_token
+        self.queue: list[GenRequest] = []
+        self.slots: list[Optional[GenRequest]] = [None] * n_slots
+        self.cache = model.init_cache(n_slots, capacity, kv_dtype)
+        self.last_tok = jnp.zeros((n_slots, 1), jnp.int32)
+        self.active = np.zeros(n_slots, bool)
+        self.stats = EngineStats()
+        self._decode = jax.jit(
+            lambda p, c, b: model.decode(p, c, b))
+
+    def submit(self, req: GenRequest):
+        self.queue.append(req)
+
+    # ---- slot management -------------------------------------------------
+    def _prefill_into_slot(self, slot: int, req: GenRequest):
+        """Run a single-sequence prefill and splice its cache into the
+        batched cache at ``slot``."""
+        batch = {"tokens": jnp.asarray(req.prompt)[None, :]}
+        logits, cache1 = self.model.prefill(self.params, batch)
+
+        # splice the single-row prefill cache into the batched cache:
+        # (L, 1, T1, ...) leaves pad their seq dim to capacity and land in
+        # batch row `slot`; the scalar pos lands at index `slot`.
+        def splice_leaf(big, small):
+            if small.ndim == big.ndim and small.shape[0] == big.shape[0] \
+                    and big.ndim >= 3:
+                # (L, 1, T1, ...) -> write into (L, n, T, ...)
+                if small.shape[1] == 1:
+                    if small.shape[2] < big.shape[2]:
+                        pad = [(0, 0)] * small.ndim
+                        pad[2] = (0, big.shape[2] - small.shape[2])
+                        small = jnp.pad(small, pad)
+                    return big.at[:, slot].set(small[:, 0].astype(big.dtype))
+            if small.ndim == 1 and big.ndim == 1:      # pos (B,)
+                return big.at[slot].set(small[0])
+            return big
+
+        self.cache = jax.tree.map(splice_leaf, self.cache, cache1)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        self.last_tok = self.last_tok.at[slot, 0].set(tok[0])
+        self.slots[slot] = req
+        self.active[slot] = True
+
+    def _refill(self):
+        for s in range(self.n):
+            if not self.active[s] and self.queue:
+                self._prefill_into_slot(s, self.queue.pop(0))
+
+    # ---- main loop --------------------------------------------------------
+    def step(self):
+        """One decode step for all active slots."""
+        self._refill()
+        if not self.active.any():
+            return False
+        self.stats.slot_occupancy.append(self.active.mean())
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          {"tokens": self.last_tok})
+        nxt = np.asarray(jnp.argmax(logits, -1).astype(jnp.int32))
+        for s in range(self.n):
+            req = self.slots[s]
+            if req is None:
+                continue
+            tok = int(self.last_tok[s, 0])
+            req.out.append(tok)
+            finished = len(req.out) >= req.max_new or \
+                (self.eos is not None and tok == self.eos) or \
+                int(self.cache["pos"][s]) >= self.cap
+            if finished:
+                req.done = True
+                self.slots[s] = None
+                self.active[s] = False
+                self.stats.finished += 1
+        self.last_tok = jnp.asarray(nxt)[:, None]
+        self.stats.steps += 1
+        return True
+
+    def run_to_completion(self, max_steps: int = 10_000):
+        while (self.queue or self.active.any()) and \
+                self.stats.steps < max_steps:
+            if not self.step():
+                break
+        return self.stats

@@ -1,0 +1,112 @@
+"""KV / state cache layouts and physical representations.
+
+The cache dtype is a *physical representation* choice in exactly the
+paper's sense (§VI: representation affects data-handling cost, here HBM
+traffic during decode). Supported: bfloat16 (default) and int8 with
+per-(token, head) scales — the int8 path is one of the beyond-paper
+hillclimb levers (EXPERIMENTS.md §Perf).
+
+Layouts (stacked over layers so the layer scan can consume slices):
+  attention: k/v (L, B, T, KHp, Dh) [+ k_scale/v_scale (L,B,T,KHp) if int8]
+  MLA:       c_kv (L, B, T, r), k_rope (L, B, T, rope)
+  SSM:       conv_x/b/c (L, B, ch, K-1), state (L, B, H, P, N) fp32
+  hybrid:    SSM stack + shared-attn k/v (J, B, T, KHp, Dh), J = invocations
+  pos:       (B,) int32 — number of valid tokens (same for all layers)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import layout_from_cfg
+from repro.models.ssm import init_ssm_cache
+
+
+def _q8(x):
+    """(..., Dh) -> int8 values + f32 scale over last axis."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.round(x.astype(jnp.float32) / scale[..., None])
+    return jnp.clip(q, -127, 127).astype(jnp.int8), scale
+
+
+def _dq8(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+            ).astype(dtype)
+
+
+def init_attn_kv(cfg, batch: int, seq: int, kv_dtype: str = "bfloat16",
+                 n_layers: int | None = None, n_kv: int | None = None):
+    lo = layout_from_cfg(cfg)
+    l = n_layers if n_layers is not None else cfg.n_layers
+    kh = n_kv if n_kv is not None else lo.khp
+    dh = cfg.head_dim
+    if kv_dtype == "int8":
+        z8 = jnp.zeros((l, batch, seq, kh, dh), jnp.int8)
+        zs = jnp.zeros((l, batch, seq, kh), jnp.float32)
+        return {"k": z8, "v": jnp.zeros_like(z8), "k_scale": zs,
+                "v_scale": jnp.zeros_like(zs)}
+    z = jnp.zeros((l, batch, seq, kh, dh), jnp.dtype(kv_dtype))
+    return {"k": z, "v": jnp.zeros_like(z)}
+
+
+def write_kv_layer(layer_cache, k_new, v_new, pos):
+    """layer_cache: slices (B,T,KH,Dh) [+ scales]; k_new/v_new (B,1,KH,Dh);
+    pos (B,) write index. Returns updated layer cache dict."""
+    bidx = jnp.arange(k_new.shape[0])
+    out = dict(layer_cache)
+    if "k_scale" in layer_cache:
+        kq, ks = _q8(k_new)
+        vq, vs = _q8(v_new)
+        out["k"] = layer_cache["k"].at[bidx, pos].set(kq[:, 0])
+        out["v"] = layer_cache["v"].at[bidx, pos].set(vq[:, 0])
+        out["k_scale"] = layer_cache["k_scale"].at[bidx, pos].set(ks[:, 0])
+        out["v_scale"] = layer_cache["v_scale"].at[bidx, pos].set(vs[:, 0])
+    else:
+        dt = layer_cache["k"].dtype
+        out["k"] = layer_cache["k"].at[bidx, pos].set(k_new[:, 0].astype(dt))
+        out["v"] = layer_cache["v"].at[bidx, pos].set(v_new[:, 0].astype(dt))
+    return out
+
+
+def read_kv_layer(layer_cache, dtype=jnp.bfloat16):
+    """-> k, v (B,T,KH,Dh) in compute dtype."""
+    if "k_scale" in layer_cache:
+        return (_dq8(layer_cache["k"], layer_cache["k_scale"], dtype),
+                _dq8(layer_cache["v"], layer_cache["v_scale"], dtype))
+    return (layer_cache["k"].astype(dtype), layer_cache["v"].astype(dtype))
+
+
+def init_mla_kv(cfg, batch: int, seq: int, kv_dtype: str = "bfloat16"):
+    m = cfg.mla
+    dt = jnp.bfloat16 if kv_dtype == "int8" else jnp.dtype(kv_dtype)
+    return {
+        "c_kv": jnp.zeros((cfg.n_layers, batch, seq, m.kv_lora_rank), dt),
+        "k_rope": jnp.zeros((cfg.n_layers, batch, seq, m.qk_rope_head_dim),
+                            dt),
+    }
+
+
+def init_cache(cfg, batch: int, seq: int, kv_dtype: str = "bfloat16"):
+    """Full decode cache for any family. 'pos' counts valid tokens."""
+    cache: dict = {"pos": jnp.zeros((batch,), jnp.int32)}
+    if cfg.family == "ssm":
+        cache["ssm"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(),
+            init_ssm_cache(cfg, batch))
+    elif cfg.family == "hybrid":
+        cache["ssm"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(),
+            init_ssm_cache(cfg, batch))
+        n_inv = cfg.n_layers // cfg.hybrid_attn_every
+        cache["shared_attn"] = init_attn_kv(cfg, batch, seq, kv_dtype,
+                                            n_layers=n_inv)
+    elif cfg.mla is not None:
+        cache["mla"] = init_mla_kv(cfg, batch, seq, kv_dtype)
+    elif cfg.family == "audio":
+        cache["self"] = init_attn_kv(cfg, batch, seq, kv_dtype)
+        cache["cross"] = init_attn_kv(cfg, batch, cfg.encoder.n_frames,
+                                      "bfloat16")
+    else:
+        cache["kv"] = init_attn_kv(cfg, batch, seq, kv_dtype)
+    return cache

@@ -1,0 +1,181 @@
+"""Name-driven sharding policy: every param leaf name maps to logical axes,
+logical axes map to mesh axes with divisibility checks (indivisible dims
+gracefully replicate). One policy serves train (TP + FSDP/ZeRO) and serve
+(2D TP) — XLA SPMD picks all-gather-weights vs psum-partials per context.
+
+Logical axes:
+  tp    -> 'model'         (heads / d_ff / experts / vocab columns)
+  fsdp  -> ('pod','data')  (ZeRO-style param+grad+opt-state sharding)
+  None  -> replicated
+
+Mesh: (data, model) single-pod, (pod, data, model) multi-pod
+(launch/mesh.py). Batch/activation/cache specs live in launch/steps.py.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# leaf name -> logical axes per dim (suffix match on the param path).
+RULES: dict[str, tuple] = {
+    # embeddings / heads
+    "embedding": ("tp", "fsdp"),
+    "lm_head": ("fsdp", "tp"),
+    "dec_pos": ("fsdp", None),
+    # attention (column-parallel in, row-parallel out)
+    "wq": ("fsdp", "tp"), "wk": ("fsdp", "tp"), "wv": ("fsdp", "tp"),
+    "wo": ("tp", "fsdp"),
+    "bq": ("tp",), "bk": (None,), "bv": (None,),
+    # MLA
+    "w_dq": ("fsdp", None), "w_uq": (None, "tp"),
+    "w_dkv": ("fsdp", None), "w_uk": (None, "tp"), "w_uv": (None, "tp"),
+    "q_norm": (None,), "kv_norm": (None,),
+    # MLP
+    "w_gate": ("fsdp", "tp"), "w_up": ("fsdp", "tp"), "w_down": ("tp", "fsdp"),
+    "w_in": ("fsdp", "tp"), "b_in": ("tp",),
+    "w_out": ("tp", "fsdp"), "b_out": (None,),
+    # MoE (stacked experts: EP over 'model', expert-width over fsdp)
+    "w_router": (None, None),
+    "w_gate_e": ("tp", None, "fsdp"), "w_up_e": ("tp", None, "fsdp"),
+    "w_down_e": ("tp", "fsdp", None),
+    # SSM
+    "w_z": ("fsdp", "tp"), "w_x": ("fsdp", "tp"), "w_dt": ("fsdp", "tp"),
+    "w_b": ("fsdp", None), "w_c": ("fsdp", None),
+    "conv_x": ("tp", None), "conv_b": (None, None), "conv_c": (None, None),
+    "conv_x_b": ("tp",), "conv_b_b": (None,), "conv_c_b": (None,),
+    "a_log": ("tp",), "dt_bias": ("tp",), "d_skip": ("tp",),
+    "norm_scale": ("tp",),
+    # norms
+    "scale": (None,), "bias": (None,),
+}
+
+LOGICAL = {"tp": ("model",), "fsdp": ("pod", "data")}
+
+
+def dp_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _resolve_dim(logical, dim_size: int, sizes: dict):
+    """logical axis name -> concrete mesh axes (or None), honoring
+    divisibility. fsdp degrades ('pod','data') -> ('data',) -> ('pod',)."""
+    if logical is None:
+        return None
+    # candidates: the full combo first, then single axes largest-first
+    singles = sorted(LOGICAL[logical], key=lambda a: -sizes.get(a, 0))
+    for axes in (LOGICAL[logical],) + tuple((a,) for a in singles):
+        axes = tuple(a for a in axes if a in sizes)
+        if not axes:
+            continue
+        prod = 1
+        for a in axes:
+            prod *= sizes[a]
+        if prod > 1 and dim_size % prod == 0:
+            return axes if len(axes) > 1 else axes[0]
+    return None
+
+
+def leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+    return ""
+
+
+def spec_for(name: str, shape, mesh) -> P:
+    """PartitionSpec for one param leaf. Stacked leaves (layer or expert
+    scan) have one more leading dim than the rule — leading dims are
+    replicated (layer axis)."""
+    rule = RULES.get(name)
+    if rule is None or not shape:
+        return P()
+    sizes = _axis_sizes(mesh)
+    extra = len(shape) - len(rule)
+    if extra < 0:
+        return P()
+    parts = [None] * extra + [
+        _resolve_dim(lg, shape[extra + i], sizes)
+        for i, lg in enumerate(rule)]
+    # 'layers' stacking: the leading scan dim stays replicated, but the
+    # expert rules already include their stack dim so only true layer
+    # stacking lands in `extra`.
+    return P(*parts)
+
+
+def param_pspecs(params_or_shapes, mesh):
+    """Tree of PartitionSpec matching the params tree (arrays or
+    ShapeDtypeStructs)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, x: spec_for(leaf_name(path), x.shape, mesh),
+        params_or_shapes)
+
+
+def param_shardings(params_or_shapes, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_pspecs(params_or_shapes, mesh))
+
+
+# ---- trace-time mesh context (lets model-internal code add constraints
+# without threading the mesh through every signature) ----
+_CTX_MESH = None
+
+
+class use_ctx_mesh:
+    def __init__(self, mesh):
+        self.mesh = mesh
+
+    def __enter__(self):
+        global _CTX_MESH
+        self._prev = _CTX_MESH
+        _CTX_MESH = self.mesh
+        return self.mesh
+
+    def __exit__(self, *exc):
+        global _CTX_MESH
+        _CTX_MESH = self._prev
+
+
+def ctx_constrain(x, *parts):
+    """with_sharding_constraint against the ambient mesh; no-op when no
+    mesh context is active (single-device tests) or axes are missing/
+    indivisible."""
+    mesh = _CTX_MESH
+    if mesh is None:
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    resolved = []
+    for dim, part in zip(x.shape, parts):
+        if part is None:
+            resolved.append(None)
+            continue
+        axes = tuple(a for a in ((part,) if isinstance(part, str) else part)
+                     if a in sizes)
+        prod = 1
+        for a in axes:
+            prod *= sizes[a]
+        resolved.append((axes if len(axes) > 1 else axes[0])
+                        if axes and prod > 1 and dim % prod == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved)))
+
+
+def ctx_dp_axes():
+    return dp_axes(_CTX_MESH) if _CTX_MESH is not None else ()
+
+
+def batch_spec(mesh, ndim: int, batch_axis: int = 0) -> P:
+    """Shard the batch dim over all data-parallel axes."""
+    dp = dp_axes(mesh)
+    parts = [None] * ndim
+    parts[batch_axis] = dp if len(dp) > 1 else (dp[0] if dp else None)
+    return P(*parts)
+
+
+def constrain_batch(x, mesh):
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, batch_spec(mesh, x.ndim)))

@@ -1,0 +1,137 @@
+"""Elastic checkpointing (fault tolerance substrate; DESIGN.md §7).
+
+Layout: <dir>/step_<n>/manifest.json + one .npy per pytree leaf.
+The manifest records the flattened treedef paths, dtypes, shapes, step,
+and the mesh shape at save time. Restore rebuilds the tree and
+``jax.device_put``s every leaf against shardings derived from the
+CURRENT mesh via the sharding policy — so a checkpoint taken on one mesh
+restores onto a different mesh (elastic scale up/down), which is the
+property tests exercise.
+
+Writes are atomic (tmp dir + rename) so a failure mid-save never corrupts
+the latest complete checkpoint.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from pathlib import Path
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy round-trips ml_dtypes (bfloat16 etc.) as void; store a uint view
+# and re-view on load using the manifest's dtype string.
+_VIEW_AS = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+            "float8_e5m2": np.uint8}
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(p.key) if isinstance(p, jax.tree_util.DictKey)
+            else str(p.idx) if isinstance(p, jax.tree_util.SequenceKey)
+            else str(p) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save(ckpt_dir, step: int, tree, *, mesh=None, keep: int = 3):
+    ckpt_dir = Path(ckpt_dir)
+    tmp = ckpt_dir / f".tmp_step_{step}"
+    final = ckpt_dir / f"step_{step}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    leaves = _flatten_with_paths(tree)
+    manifest = {"step": step, "leaves": [], "mesh_shape":
+                list(mesh.devices.shape) if mesh is not None else None}
+    for i, (key, leaf) in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        dtype = str(arr.dtype)
+        if dtype in _VIEW_AS:
+            arr = arr.view(_VIEW_AS[dtype])
+        fname = f"leaf_{i:05d}.npy"
+        np.save(tmp / fname, arr)
+        manifest["leaves"].append(
+            {"key": key, "file": fname, "dtype": dtype,
+             "shape": list(arr.shape)})
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: Path, keep: int):
+    steps = sorted((int(p.name.split("_")[1]), p)
+                   for p in ckpt_dir.glob("step_*"))
+    for _, p in steps[:-keep]:
+        shutil.rmtree(p)
+
+
+class AsyncSaver:
+    """Overlap checkpoint IO with training: device_get happens on the
+    caller (cheap, avoids racing donated buffers), serialization + fsync
+    run on a background thread. ``wait()`` joins the in-flight save;
+    a new save waits for the previous one (at most one in flight)."""
+
+    def __init__(self):
+        self._thread = None
+
+    def save(self, ckpt_dir, step: int, tree, *, mesh=None, keep: int = 3):
+        import threading
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+        self._thread = threading.Thread(
+            target=save, args=(ckpt_dir, step, host_tree),
+            kwargs=dict(mesh=mesh, keep=keep), daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def latest_step(ckpt_dir) -> int | None:
+    ckpt_dir = Path(ckpt_dir)
+    steps = [int(p.name.split("_")[1]) for p in ckpt_dir.glob("step_*")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir, step: int, tree_like, *, mesh=None,
+            sharding_fn=None):
+    """tree_like: a pytree (arrays or ShapeDtypeStructs) giving the target
+    structure. sharding_fn(tree_like, mesh) -> shardings tree; defaults to
+    the repo sharding policy. Leaves are device_put against the CURRENT
+    mesh — elastic restore."""
+    path = Path(ckpt_dir) / f"step_{step}"
+    manifest = json.loads((path / "manifest.json").read_text())
+    flat, treedef = jax.tree_util.tree_flatten(tree_like)
+    assert len(flat) == len(manifest["leaves"]), \
+        f"leaf count mismatch: {len(flat)} vs {len(manifest['leaves'])}"
+    shardings = None
+    if mesh is not None:
+        if sharding_fn is None:
+            from repro.sharding.policy import param_shardings
+            sharding_fn = param_shardings
+        shardings = jax.tree_util.tree_flatten(
+            sharding_fn(jax.tree_util.tree_unflatten(treedef, flat),
+                        mesh))[0]
+    out = []
+    for i, meta in enumerate(manifest["leaves"]):
+        arr = np.load(path / meta["file"])
+        if meta["dtype"] in _VIEW_AS:
+            arr = arr.view(getattr(ml_dtypes, meta["dtype"]))
+        if shardings is not None:
+            out.append(jax.device_put(arr, shardings[i]))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)

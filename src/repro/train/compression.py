@@ -1,0 +1,76 @@
+"""Gradient compression for the data-parallel reduction (large-scale
+distributed-optimization trick; DESIGN.md §5).
+
+Two error-feedback compressors, composable in front of the optimizer:
+
+* top-k sparsification with error feedback (Stich et al.): only the k
+  largest-magnitude entries of (grad + residual) are transmitted; the
+  untransmitted remainder becomes the next step's residual, so the scheme
+  is contractive and unbiased-in-the-limit.
+* int8 quantization with per-tensor scale + error feedback.
+
+On a real fleet these run per-shard before the reduce; here the compress->
+decompress round trip is applied in-graph so training quality effects and
+compression ratios are measurable (tests/test_compression.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Compressor(NamedTuple):
+    init: callable      # params -> residual state
+    apply: callable     # (grads, state) -> (decompressed, state, stats)
+
+
+def topk_compressor(k_frac: float = 0.01) -> Compressor:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                            params)
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        flat = gf.ravel()
+        n = flat.shape[0]
+        k = max(1, int(n * k_frac))
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        sent = jnp.zeros_like(flat).at[idx].set(flat[idx])
+        resid = flat - sent
+        return sent.reshape(gf.shape), resid.reshape(gf.shape)
+
+    def apply(grads, state):
+        out = jax.tree.map(one, grads, state)
+        dec = jax.tree.map(lambda t: t[0], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+        res = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+        stats = {"ratio": k_frac}
+        return dec, res, stats
+
+    return Compressor(init, apply)
+
+
+def int8_compressor() -> Compressor:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                            params)
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        dec = q.astype(jnp.float32) * scale
+        return dec, gf - dec
+
+    def apply(grads, state):
+        out = jax.tree.map(one, grads, state)
+        dec = jax.tree.map(lambda t: t[0], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+        res = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+        return dec, res, {"ratio": 0.25}
+
+    return Compressor(init, apply)

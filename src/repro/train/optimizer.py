@@ -1,0 +1,115 @@
+"""Optimizers + LR schedules (optax is not available offline — own impl).
+
+State trees mirror the params tree leaf-for-leaf, so the sharding policy's
+name-suffix rules apply to optimizer state unchanged (ZeRO-style: m/v shard
+exactly like their params).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params) -> (new_params, new_state)
+
+
+def _cast_tree(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+def adamw(lr, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.0,
+          grad_clip: float | None = 1.0) -> Optimizer:
+    """lr: float or schedule fn(step)->float. m/v kept in float32."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"m": zeros, "v": jax.tree.map(jnp.copy, zeros),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        gnorm = None
+        if grad_clip is not None:
+            grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        count = state["count"] + 1
+        step_lr = lr_fn(count)
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * gf
+            v2 = b2 * v + (1 - b2) * gf * gf
+            step = (m2 / c1) / (jnp.sqrt(v2 / c2) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step_lr * step).astype(p.dtype), \
+                m2, v2
+
+        flat = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda t: t[0], flat,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], flat,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], flat,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_state = {"m": new_m, "v": new_v, "count": count}
+        return new_params, new_state, {"grad_norm": gnorm,
+                                       "lr": jnp.float32(step_lr)}
+
+    return Optimizer(init, update)
+
+
+def sgd(lr, momentum=0.9) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"mu": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        step_lr = lr_fn(count)
+
+        def upd(p, g, mu):
+            mu2 = momentum * mu + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step_lr * mu2).astype(p.dtype), mu2
+
+        flat = jax.tree.map(upd, params, grads, state["mu"])
+        new_params = jax.tree.map(lambda t: t[0], flat,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], flat,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"mu": new_mu, "count": count}, {}
+
+    return Optimizer(init, update)
+
+
+def cosine_schedule(peak: float, warmup: int, total: int,
+                    floor_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = peak * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak * (floor_frac + (1 - floor_frac)
+                      * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(s < warmup, warm, cos)
+    return fn

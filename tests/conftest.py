@@ -1,0 +1,23 @@
+import os
+import sys
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+# NOTE: device count is intentionally NOT forced here — smoke tests run on
+# the single real CPU device. Multi-device tests spawn subprocesses with
+# their own XLA_FLAGS (see tests/_subproc.py).
+
+
+def run_subprocess_jax(code: str, devices: int = 8, timeout: int = 600):
+    """Run a jax snippet in a fresh interpreter with N host devices."""
+    import subprocess
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=timeout)
+    assert r.returncode == 0, f"subprocess failed:\n{r.stderr[-4000:]}"
+    return r.stdout

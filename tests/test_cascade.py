@@ -1,0 +1,105 @@
+"""Vectorized cascade evaluation == naive per-image simulation (accuracy
+AND expected cost), across scenarios — the core §V-D/E machinery."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cascade import (KIND_SINGLE, KIND_THREE, KIND_TWO,
+                                cascade_time_naive, evaluate_cascades,
+                                simulate_cascade, spec_levels)
+from repro.core.costs import CostProfile
+from repro.core.thresholds import compute_thresholds_batch
+from repro.core.transforms import Representation
+
+
+def _setup(seed, n_models=4, n_img=60, n_targets=2):
+    rng = np.random.default_rng(seed)
+    truth = rng.integers(0, 2, n_img)
+    scores = np.clip(truth[None] * rng.uniform(0.3, 0.7, (n_models, 1))
+                     + rng.normal(0.25, 0.2, (n_models, n_img)), 0, 1)
+    p_low, p_high = compute_thresholds_batch(scores, truth, [0.9, 0.95][:n_targets])
+    reps = [Representation(8 * (1 + i % 3), ["rgb", "gray", "r"][i % 3])
+            for i in range(n_models)]
+    reps[-1] = Representation(32, "rgb")   # trusted: full rep
+    infer = rng.uniform(1e-4, 5e-3, n_models)
+    infer[-1] = 0.05                       # trusted is expensive
+    profile = CostProfile.modeled({}, list(set(reps)), base_hw=32)
+    return scores, truth, p_low, p_high, reps, infer, profile
+
+
+@pytest.mark.parametrize("scenario",
+                         ["INFER_ONLY", "ARCHIVE", "ONGOING", "CAMERA"])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_vectorized_matches_naive(scenario, seed):
+    scores, truth, p_low, p_high, reps, infer, profile = _setup(seed)
+    space = evaluate_cascades(scores, truth, p_low, p_high, reps, infer,
+                              profile, scenario, trusted=len(reps) - 1)
+    rng = np.random.default_rng(seed + 7)
+    for i in rng.choice(len(space), size=40, replace=False):
+        levels = spec_levels(space, int(i), p_low, p_high)
+        acc, _ = simulate_cascade(levels, scores, truth)
+        t = cascade_time_naive(levels, scores, reps, infer, profile,
+                               scenario)
+        assert space.acc[i] == pytest.approx(acc, abs=1e-5), \
+            (i, space.kind[i])
+        assert space.time_s[i] == pytest.approx(t, rel=1e-5), \
+            (i, space.kind[i])
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000),
+       st.sampled_from(["INFER_ONLY", "CAMERA", "ARCHIVE", "ONGOING"]))
+def test_vectorized_matches_naive_hypothesis(seed, scenario):
+    scores, truth, p_low, p_high, reps, infer, profile = _setup(
+        seed, n_models=3, n_img=40, n_targets=1)
+    space = evaluate_cascades(scores, truth, p_low, p_high, reps, infer,
+                              profile, scenario, trusted=len(reps) - 1)
+    rng = np.random.default_rng(seed)
+    for i in rng.choice(len(space), size=10, replace=False):
+        levels = spec_levels(space, int(i), p_low, p_high)
+        acc, _ = simulate_cascade(levels, scores, truth)
+        t = cascade_time_naive(levels, scores, reps, infer, profile,
+                               scenario)
+        assert abs(space.acc[i] - acc) < 1e-5
+        assert abs(space.time_s[i] - t) < max(1e-9, 1e-5 * t)
+
+
+def test_enumeration_counts():
+    scores, truth, p_low, p_high, reps, infer, profile = _setup(0)
+    m, t = scores.shape[0], p_low.shape[1]
+    space = evaluate_cascades(scores, truth, p_low, p_high, reps, infer,
+                              profile, "INFER_ONLY", trusted=m - 1)
+    expect = m + (m * t) * m + (m * t) * (m * t)
+    assert len(space) == expect
+    assert (space.kind == KIND_SINGLE).sum() == m
+    assert (space.kind == KIND_TWO).sum() == m * t * m
+    assert (space.kind == KIND_THREE).sum() == (m * t) ** 2
+
+
+def test_rep_cost_charged_once():
+    """Two levels sharing a representation must be cheaper than the same
+    cascade with distinct representations (CAMERA scenario)."""
+    scores, truth, p_low, p_high, reps, infer, profile = _setup(3)
+    reps_same = list(reps)
+    reps_same[1] = reps[0]
+    sp_same = evaluate_cascades(scores, truth, p_low, p_high, reps_same,
+                                infer, profile, "CAMERA",
+                                trusted=len(reps) - 1)
+    sp_diff = evaluate_cascades(scores, truth, p_low, p_high, reps,
+                                infer, profile, "CAMERA",
+                                trusted=len(reps) - 1)
+    # cascade: model0@t0 -> model1 (two-level)
+    sel = (sp_same.kind == KIND_TWO) & (sp_same.i1 == 0) & (sp_same.i2 == 1)
+    i = np.where(sel)[0][0]
+    assert sp_same.time_s[i] < sp_diff.time_s[i]
+
+
+def test_infer_only_fastest_scenario():
+    scores, truth, p_low, p_high, reps, infer, profile = _setup(4)
+    spi = evaluate_cascades(scores, truth, p_low, p_high, reps, infer,
+                            profile, "INFER_ONLY", trusted=len(reps) - 1)
+    for scen in ("ARCHIVE", "ONGOING", "CAMERA"):
+        sp = evaluate_cascades(scores, truth, p_low, p_high, reps, infer,
+                               profile, scen, trusted=len(reps) - 1)
+        assert np.all(sp.time_s >= spi.time_s - 1e-12)
+        assert np.allclose(sp.acc, spi.acc)  # accuracy scenario-invariant

@@ -1,0 +1,157 @@
+"""launch/costing.py — the roofline accounting itself (scan-aware jaxpr
+FLOPs, HLO collective parsing with trip-count correction, analytic
+memory model)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import costing
+
+
+# ------------------------------------------------------------ jaxpr flops --
+def test_dot_flops_exact():
+    f = lambda a, b: a @ b
+    jx = jax.make_jaxpr(f)(jax.ShapeDtypeStruct((64, 32), jnp.float32),
+                           jax.ShapeDtypeStruct((32, 16), jnp.float32))
+    assert costing.jaxpr_flops(jx) == 2 * 64 * 32 * 16
+
+
+def test_scan_flops_multiplied():
+    def f(h, ws):
+        return jax.lax.scan(lambda c, w: (jnp.tanh(c @ w), None), h, ws)[0]
+    jx = jax.make_jaxpr(f)(jax.ShapeDtypeStruct((32, 32), jnp.float32),
+                           jax.ShapeDtypeStruct((7, 32, 32), jnp.float32))
+    expect = 7 * (2 * 32 ** 3 + 32 * 32)  # matmul + tanh per step
+    assert costing.jaxpr_flops(jx) == expect
+
+
+def test_grad_flops_counts_backward():
+    def loss(w, x):
+        return jnp.sum(jnp.tanh(x @ w))
+    g = jax.grad(loss)
+    jx = jax.make_jaxpr(g)(jax.ShapeDtypeStruct((32, 32), jnp.float32),
+                           jax.ShapeDtypeStruct((8, 32), jnp.float32))
+    fwd = 2 * 8 * 32 * 32
+    # bwd: dw = x^T @ dy (same flops); elementwise terms on top
+    assert costing.jaxpr_flops(jx) >= 2 * fwd
+
+
+def test_batched_dot_flops():
+    f = lambda a, b: jnp.einsum("bij,bjk->bik", a, b)
+    jx = jax.make_jaxpr(f)(jax.ShapeDtypeStruct((4, 8, 16), jnp.float32),
+                           jax.ShapeDtypeStruct((4, 16, 32), jnp.float32))
+    assert costing.jaxpr_flops(jx) == 2 * 4 * 8 * 16 * 32
+
+
+def test_remat_recompute_counted():
+    def f(w, x):
+        g = jax.checkpoint(lambda xx: jnp.tanh(xx @ w))
+        return jnp.sum(g(g(x)))
+    base = jax.make_jaxpr(jax.grad(f, argnums=1))(
+        jax.ShapeDtypeStruct((32, 32), jnp.float32),
+        jax.ShapeDtypeStruct((8, 32), jnp.float32))
+    flops = costing.jaxpr_flops(base)
+    # 2 fwd + 2 recompute + 2 bwd dots minimum
+    assert flops >= 6 * 2 * 8 * 32 * 32
+
+
+# ------------------------------------------------- collective text parse ---
+SYN_HLO = """
+HloModule m
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%cond (p: (s32[], f32[4,8])) -> pred[] {
+  %iv = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(5)
+  ROOT %lt = pred[] compare(%iv, %c), direction=LT
+}
+
+%body (p: (s32[], f32[4,8])) -> (s32[], f32[4,8]) {
+  %x = f32[4,8]{1,0} get-tuple-element(%p), index=1
+  %ar = f32[4,8]{1,0} all-reduce(%x), to_apply=%add
+  ROOT %t = (s32[], f32[4,8]) tuple(%iv2, %ar)
+}
+
+ENTRY %main (a: f32[4,8]) -> f32[4,8] {
+  %ag = bf16[16,8]{1,0} all-gather(%a2), dimensions={0}
+  %w = (s32[], f32[4,8]) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[4,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_parse_collectives_trip_corrected():
+    res = costing.parse_collectives(SYN_HLO)
+    by = res["bytes_by_type"]
+    assert by["all-gather"] == 16 * 8 * 2          # bf16, outside loops
+    assert by["all-reduce"] == 5 * 4 * 8 * 4       # f32, x5 trip count
+    assert res["count_by_type"]["all-reduce"] == 5
+
+
+def test_parse_collectives_empty():
+    assert costing.parse_collectives("ENTRY %m () -> f32[] {\n}\n")[
+        "total_bytes"] == 0
+
+
+# --------------------------------------------------------- memory model ----
+def _shape(kind, **kw):
+    from repro.configs.base import ShapeConfig
+    base = dict(name="t", kind=kind, seq_len=4096, global_batch=8)
+    base.update(kw)
+    return ShapeConfig(**base)
+
+
+def test_analytic_bytes_train_scaling():
+    from repro.configs.registry import get_arch
+    arch = get_arch("deepseek-7b").replace(head_pad_to=16)
+    n = 7_000_000_000
+    m1 = costing.analytic_bytes("train", arch, _shape("train"), n, 1, 0,
+                                256)
+    m16 = costing.analytic_bytes("train", arch,
+                                 _shape("train"), n, 16, 0, 256)
+    # weight streams scale with microbatch count; optimizer traffic not
+    assert m16.breakdown["weights"] == 16 * m1.breakdown["weights"]
+    assert m16.breakdown["optimizer"] == m1.breakdown["optimizer"]
+
+
+def test_analytic_bytes_decode_cache_dominates():
+    from repro.configs.registry import get_arch
+    arch = get_arch("qwen2.5-32b").replace(head_pad_to=16)
+    cache = 1.1e12
+    m = costing.analytic_bytes("decode", arch,
+                               _shape("decode", seq_len=32768,
+                                      global_batch=128),
+                               33.4e9, 1, cache, 256)
+    assert m.breakdown["cache_read"] == cache
+    assert m.breakdown["cache_read"] > m.breakdown["weights"]
+
+
+def test_prefill_last_only_cuts_logit_bytes():
+    from repro.configs.registry import get_arch
+    arch = get_arch("qwen2.5-32b").replace(head_pad_to=16)
+    full = costing.analytic_bytes(
+        "prefill", arch, _shape("prefill", seq_len=32768, global_batch=32),
+        33.4e9, 1, 0, 256)
+    last = costing.analytic_bytes(
+        "prefill", arch,
+        _shape("prefill", seq_len=32768, global_batch=32,
+               prefill_last_only=True), 33.4e9, 1, 0, 256)
+    assert last.breakdown["logits"] * 1000 < full.breakdown["logits"]
+
+
+def test_chunked_attention_removes_score_traffic():
+    from repro.configs.registry import get_arch
+    arch = get_arch("deepseek-v2-236b").replace(head_pad_to=16)
+    dense = costing.analytic_bytes("train", arch,
+                                   _shape("train", global_batch=256),
+                                   239e9, 16, 0, 256)
+    chunked = costing.analytic_bytes(
+        "train", arch,
+        _shape("train", global_batch=256, train_attn_chunk=1024),
+        239e9, 16, 0, 256)
+    assert chunked.breakdown["activations"] \
+        < 0.5 * dense.breakdown["activations"]

@@ -1,0 +1,25 @@
+"""Deployment-config rules encode the §Perf measurements."""
+from repro.configs.deployment import tuned_shape
+from repro.configs.registry import get_arch
+from repro.configs.shapes import DECODE_32K, LONG_500K, PREFILL_32K, TRAIN_4K
+
+
+def test_decode_rules():
+    t = tuned_shape(get_arch("qwen2.5-32b"), DECODE_32K)
+    assert t.params_tp_only and t.kv_dtype == "int8"
+    # tiny-model long-context keeps baseline (measured regression)
+    t = tuned_shape(get_arch("mamba2-130m"), LONG_500K)
+    assert not t.params_tp_only and t.kv_dtype == "bfloat16"
+
+
+def test_prefill_rules():
+    t = tuned_shape(get_arch("granite-20b"), PREFILL_32K)
+    assert t.params_tp_only and t.prefill_last_only
+
+
+def test_train_rules():
+    moe = tuned_shape(get_arch("deepseek-v2-236b"), TRAIN_4K)
+    assert moe.train_attn_chunk and moe.remat_policy == "dots" \
+        and moe.microbatch_seqs_per_shard == 4
+    dense = tuned_shape(get_arch("qwen2.5-32b"), TRAIN_4K)
+    assert dense == TRAIN_4K  # baseline retained (measured better)

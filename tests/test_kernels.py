@@ -1,0 +1,82 @@
+"""Per-kernel shape/dtype sweeps vs the ref.py pure-jnp oracles
+(interpret mode on CPU — deliverable c)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("res", [8, 16, 32])
+@pytest.mark.parametrize("color", ["rgb", "r", "g", "b", "gray"])
+def test_image_transform(res, color):
+    img = RNG.random((3, 32, 32, 3), np.float32)
+    out = ops.transform_op(jnp.asarray(img), res=res, color=color)
+    expect = ops.transform_op(jnp.asarray(img), res=res, color=color,
+                              backend="ref")
+    assert out.shape == (3, res, res, 1 if color != "rgb" else 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(64, 96, 32), (128, 128, 128),
+                                   (33, 17, 65), (256, 64, 130)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_matmul(shape, dtype):
+    m, k, n = shape
+    a = RNG.standard_normal((m, k)).astype(dtype)
+    b = RNG.standard_normal((k, n)).astype(dtype)
+    out = ops.matmul_op(a, b)
+    expect = ref.matmul_ref(a, b)
+    tol = 1e-3 if dtype == np.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("bhsd", [(1, 2, 64, 32), (2, 3, 128, 64),
+                                  (1, 1, 256, 16)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_flash_attention(causal, bhsd, dtype):
+    b, h, s, d = bhsd
+    q = (RNG.standard_normal((b, h, s, d)) * 0.5).astype(dtype)
+    k = (RNG.standard_normal((b, h, s, d)) * 0.5).astype(dtype)
+    v = (RNG.standard_normal((b, h, s, d)) * 0.5).astype(dtype)
+    out = ops.flash_attention_op(q, k, v, causal=causal)
+    expect = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-3 if dtype == np.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("chunk", [16, 32, 64])
+@pytest.mark.parametrize("shp", [(1, 64, 2, 8, 16), (2, 128, 3, 16, 32)])
+def test_ssd_scan(chunk, shp):
+    b, s, h, p, n = shp
+    x = (RNG.standard_normal((b, s, h, p)) * 0.5).astype(np.float32)
+    dt = (RNG.random((b, s, h)) * 0.1).astype(np.float32)
+    a = (-RNG.random(h) * 2).astype(np.float32)
+    bm = (RNG.standard_normal((b, s, n)) * 0.3).astype(np.float32)
+    cm = (RNG.standard_normal((b, s, n)) * 0.3).astype(np.float32)
+    y = ops.ssd_scan_op(x, dt, a, bm, cm, chunk=chunk)
+    yr = ref.ssd_scan_ref(x, dt, a, bm, cm, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=5e-4, rtol=5e-3)
+
+
+def test_ssd_chunk_invariance():
+    """Chunk size is an implementation detail — results must not change."""
+    b, s, h, p, n = 1, 128, 2, 8, 16
+    x = (RNG.standard_normal((b, s, h, p)) * 0.5).astype(np.float32)
+    dt = (RNG.random((b, s, h)) * 0.1).astype(np.float32)
+    a = (-RNG.random(h)).astype(np.float32)
+    bm = (RNG.standard_normal((b, s, n)) * 0.3).astype(np.float32)
+    cm = (RNG.standard_normal((b, s, n)) * 0.3).astype(np.float32)
+    y1 = ops.ssd_scan_op(x, dt, a, bm, cm, chunk=16)
+    y2 = ops.ssd_scan_op(x, dt, a, bm, cm, chunk=128)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=5e-4, rtol=5e-3)

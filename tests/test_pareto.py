@@ -1,0 +1,58 @@
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pareto import dominates, is_frontier, pareto_indices
+
+
+def brute_force(acc, thr):
+    pts = list(zip(acc, thr))
+    out = []
+    for i, p in enumerate(pts):
+        if not any(dominates(q, p) for j, q in enumerate(pts) if j != i):
+            out.append(i)
+    return out
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.floats(0, 1), st.floats(0.01, 100)),
+                min_size=1, max_size=60))
+def test_frontier_nondominated(points):
+    acc = np.array([p[0] for p in points])
+    thr = np.array([p[1] for p in points])
+    idx = pareto_indices(acc, thr)
+    assert len(idx) >= 1
+    for i in idx:
+        assert is_frontier(acc, thr, int(i))
+    # every excluded point is dominated or a duplicate of a frontier point
+    fr = {(acc[i], thr[i]) for i in idx}
+    for j in range(len(points)):
+        if j not in set(idx.tolist()):
+            p = (acc[j], thr[j])
+            assert p in fr or any(
+                dominates((acc[i], thr[i]), p) for i in idx)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.floats(0, 1), st.floats(0.01, 100)),
+                min_size=2, max_size=40))
+def test_adding_dominated_point_keeps_frontier(points):
+    acc = np.array([p[0] for p in points])
+    thr = np.array([p[1] for p in points])
+    idx = pareto_indices(acc, thr)
+    # add a clearly dominated point
+    k = int(idx[0])
+    acc2 = np.append(acc, acc[k] * 0.5)
+    thr2 = np.append(thr, thr[k] * 0.5)
+    idx2 = pareto_indices(acc2, thr2)
+    assert {(acc[i], thr[i]) for i in idx} == \
+        {(acc2[i], thr2[i]) for i in idx2}
+
+
+def test_matches_bruteforce():
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        acc = rng.random(30)
+        thr = rng.random(30) * 10
+        fast = {(acc[i], thr[i]) for i in pareto_indices(acc, thr)}
+        slow = {(acc[i], thr[i]) for i in brute_force(acc, thr)}
+        assert fast == slow

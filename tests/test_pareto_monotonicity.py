@@ -1,0 +1,47 @@
+"""System-level invariant (paper §V-E): enlarging the model pool can only
+improve (never worsen) the attainable accuracy/throughput frontier —
+adding models adds cascades and the Pareto frontier is monotone under
+union."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.alc import alc
+from repro.core.cascade import evaluate_cascades
+from repro.core.costs import CostProfile
+from repro.core.thresholds import compute_thresholds_batch
+from repro.core.transforms import Representation
+
+
+def _bank(seed, n_models, n_img=50):
+    rng = np.random.default_rng(seed)
+    truth = rng.integers(0, 2, n_img)
+    scores = np.clip(truth[None] * rng.uniform(0.3, 0.7, (n_models, 1))
+                     + rng.normal(0.25, 0.2, (n_models, n_img)), 0, 1)
+    p_low, p_high = compute_thresholds_batch(scores, truth, [0.9])
+    reps = [Representation(8 * (1 + i % 3), ["rgb", "gray", "r"][i % 3])
+            for i in range(n_models)]
+    infer = rng.uniform(1e-5, 5e-3, n_models)
+    infer[-1] = 0.05
+    prof = CostProfile.modeled({}, list(set(reps)), 32)
+    return scores, truth, p_low, p_high, reps, infer, prof
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10_000),
+       st.sampled_from(["INFER_ONLY", "CAMERA", "ONGOING"]))
+def test_bigger_pool_never_worse(seed, scenario):
+    scores, truth, p_low, p_high, reps, infer, prof = _bank(seed, 6)
+    # subset pool = models {0,1,trusted}; full pool = all 6
+    keep = [0, 1, 5]
+    small = evaluate_cascades(scores[keep], truth, p_low[keep],
+                              p_high[keep], [reps[i] for i in keep],
+                              infer[keep], prof, scenario, trusted=2)
+    full = evaluate_cascades(scores, truth, p_low, p_high, reps, infer,
+                             prof, scenario, trusted=5)
+    lo, hi = small.acc.min(), small.acc.max()
+    if hi <= lo:
+        return
+    a_small = alc(small.acc, small.throughput, lo, hi)
+    a_full = alc(full.acc, full.throughput, lo, hi)
+    assert a_full >= a_small - 1e-9
+    assert full.acc.max() >= small.acc.max() - 1e-12

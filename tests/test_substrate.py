@@ -1,0 +1,210 @@
+"""Optimizer / compression / checkpoint / FT runtime / pipeline / batcher /
+executor / query — the substrate around the model zoo."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.executor import calibrate_capacity, run_cascade_batch
+from repro.core.query import BinaryPredicate, Corpus, run_query
+from repro.data.pipeline import Prefetcher, batched
+from repro.serve.batcher import Batcher, Request
+from repro.train import checkpoint as ck
+from repro.train.compression import int8_compressor, topk_compressor
+from repro.train.optimizer import adamw, cosine_schedule, sgd
+from repro.train.runtime import RuntimeConfig, StragglerDetector, TrainRuntime
+
+
+# -------------------------------------------------------------- optimizer --
+@pytest.mark.parametrize("make", [lambda: adamw(0.1),
+                                  lambda: sgd(0.05, momentum=0.9)])
+def test_optimizer_converges_quadratic(make):
+    opt = make()
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = opt.update(grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_cosine_schedule():
+    fn = cosine_schedule(1.0, warmup=10, total=100, floor_frac=0.1)
+    assert float(fn(jnp.int32(5))) == pytest.approx(0.5)
+    assert float(fn(jnp.int32(10))) == pytest.approx(1.0, abs=0.02)
+    assert float(fn(jnp.int32(100))) == pytest.approx(0.1, abs=0.02)
+
+
+# ------------------------------------------------------------ compression --
+@pytest.mark.parametrize("make", [lambda: topk_compressor(0.25),
+                                  int8_compressor])
+def test_error_feedback_identity(make):
+    """decompressed + residual' == grad + residual (nothing is lost)."""
+    comp = make()
+    g = {"w": jnp.asarray(np.random.default_rng(0)
+                          .standard_normal((8, 8)).astype(np.float32))}
+    state = comp.init(g)
+    for _ in range(3):
+        dec, state2, _ = comp.apply(g, state)
+        np.testing.assert_allclose(
+            np.asarray(dec["w"] + state2["w"]),
+            np.asarray(g["w"] + state["w"]), atol=1e-5)
+        state = state2
+
+
+def test_compressed_training_still_converges():
+    opt = adamw(0.05)
+    comp = topk_compressor(0.5)
+    params = {"w": jnp.asarray([4.0, -3.0, 2.0, -1.0])}
+    state = opt.init(params)
+    resid = comp.init(params)
+    for _ in range(300):
+        grads = {"w": 2 * params["w"]}
+        dec, resid, _ = comp.apply(grads, resid)
+        params, state, _ = opt.update(dec, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 5e-2
+
+
+# -------------------------------------------------------------- checkpoint --
+def test_checkpoint_roundtrip_and_gc():
+    tree = {"a": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3),
+            "b": {"c": jnp.float32(3.5)}}
+    with tempfile.TemporaryDirectory() as d:
+        for s in (1, 2, 3, 4, 5):
+            ck.save(d, s, tree, keep=2)
+        assert ck.latest_step(d) == 5
+        like = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(jnp.shape(x), x.dtype), tree)
+        back = ck.restore(d, 5, like)
+        assert back["a"].dtype == jnp.bfloat16
+        np.testing.assert_array_equal(np.asarray(back["a"], np.float32),
+                                      np.asarray(tree["a"], np.float32))
+        # gc kept only 2
+        import pathlib
+        assert len(list(pathlib.Path(d).glob("step_*"))) == 2
+
+
+# ------------------------------------------------------------- FT runtime --
+def test_runtime_recovers_and_matches_uninterrupted():
+    def step_fn(params, opt, batch):
+        p = {"w": params["w"] + batch["x"]}
+        return p, opt, {"loss": jnp.sum(p["w"])}
+
+    def batches(step):
+        return {"x": jnp.float32(step + 1)}
+
+    with tempfile.TemporaryDirectory() as d1:
+        rt = TrainRuntime(step_fn, RuntimeConfig(d1, ckpt_every=3))
+        p0 = {"w": jnp.float32(0.0)}
+        pA, _, histA = rt.run(p0, {}, batches, num_steps=10)
+    with tempfile.TemporaryDirectory() as d2:
+        rt = TrainRuntime(step_fn, RuntimeConfig(d2, ckpt_every=3))
+        rt.inject_failure_at = {5, 8}
+        pB, _, histB = rt.run(p0, {}, batches, num_steps=10)
+        assert rt.recoveries == 2
+    assert float(pA["w"]) == float(pB["w"])  # recovery is replay-exact
+
+
+def test_straggler_detector():
+    det = StragglerDetector(warmup=3, z_thresh=2.5)
+    flagged = [det.observe(i, 0.1 + 0.001 * (i % 2)) for i in range(20)]
+    assert not any(flagged)
+    assert det.observe(20, 1.5)          # 15x normal -> flagged
+    assert det.flagged[0][0] == 20
+    assert not det.observe(21, 0.1)      # baseline not poisoned
+
+
+# -------------------------------------------------------- data pipeline ----
+def test_prefetcher_preserves_stream():
+    items = list(range(50))
+    out = list(Prefetcher(iter(items), depth=4))
+    assert out == items
+
+
+def test_prefetcher_propagates_errors():
+    def gen():
+        yield 1
+        raise ValueError("boom")
+    with pytest.raises(ValueError):
+        list(Prefetcher(gen()))
+
+
+def test_batched_epochs():
+    x = np.arange(10)[:, None]
+    y = np.arange(10)
+    batches = list(batched(x, y, 4, epochs=2))
+    assert len(batches) == 4  # 2 per epoch (drop remainder)
+    assert batches[0]["images"].shape == (4, 1)
+
+
+# ------------------------------------------------------------- batcher -----
+def test_batcher_batches_and_pads():
+    calls = []
+
+    def run(payloads):
+        calls.append(len(payloads))
+        return [p * 2 for p in payloads]
+
+    b = Batcher(run, batch_size=4, max_wait_s=100)
+    reqs = [Request(i, i) for i in range(6)]
+    for r in reqs:
+        b.submit(r)
+    b.drain()
+    assert [r.result for r in reqs] == [0, 2, 4, 6, 8, 10]
+    assert b.stats.batches == 2 and b.stats.padded_slots == 2
+
+
+# ------------------------------------------------------------- executor ----
+def test_batched_executor_matches_sequential():
+    rng = np.random.default_rng(0)
+    imgs = jnp.asarray(rng.random((32, 8, 8, 3), np.float32))
+
+    def model_a(x):  # uncertain in the middle band
+        return jnp.clip(x.mean(axis=(1, 2, 3)) * 2.0, 0, 1)
+
+    def model_b(x):
+        return (x.mean(axis=(1, 2, 3)) > 0.5).astype(jnp.float32)
+
+    ident = lambda x: x
+    labels, stats = run_cascade_batch(
+        imgs, [model_a, model_b], [(0.3, 0.7), (None, None)],
+        [ident, ident], capacities=[32])
+    # sequential reference
+    o = np.asarray(model_a(imgs))
+    expect = np.where(o >= 0.7, 1, np.where(o <= 0.3, 0,
+                      np.asarray(model_b(imgs))))
+    np.testing.assert_array_equal(np.asarray(labels), expect)
+    assert int(stats["overflow"]) == 0
+
+
+def test_batched_executor_overflow_fallback():
+    imgs = jnp.asarray(np.full((16, 4, 4, 3), 0.5, np.float32))
+    model_a = lambda x: jnp.full((x.shape[0],), 0.5)   # all uncertain
+    model_b = lambda x: jnp.ones((x.shape[0],))
+    labels, stats = run_cascade_batch(
+        imgs, [model_a, model_b], [(0.3, 0.7), (None, None)],
+        [lambda x: x] * 2, capacities=[4])
+    assert int(stats["overflow"]) == 12
+    # overflow items fall back to level-0 forced decision (0.5 -> positive)
+    assert int(np.asarray(labels).sum()) == 16
+    assert calibrate_capacity(0.25, 64) >= 16
+
+
+# ---------------------------------------------------------------- query ----
+def test_query_combines_metadata_and_predicates():
+    rng = np.random.default_rng(0)
+    imgs = rng.random((20, 4, 4, 3)).astype(np.float32)
+    corpus = Corpus(images=imgs,
+                    metadata={"city": np.array(["detroit", "akron"] * 10)})
+    pred = BinaryPredicate("bright",
+                           lambda x: (x.mean(axis=(1, 2, 3)) > 0.5
+                                      ).astype(np.int32))
+    ids = run_query(corpus, metadata_eq={"city": "detroit"},
+                    binary_preds=[pred])
+    bright = imgs.mean(axis=(1, 2, 3)) > 0.5
+    expect = [i for i in range(20) if i % 2 == 0 and bright[i]]
+    assert list(ids) == expect
+    assert "bright" in corpus.virtual_columns  # cached

@@ -1,0 +1,68 @@
+"""Algorithm 1: faithful port vs vectorized batch implementation, plus the
+precision guarantee the thresholds exist to provide."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.thresholds import (PRECISION_TARGETS, compute_thresholds,
+                                   compute_thresholds_batch)
+
+
+def _rand_scores(rng, n):
+    """Scores loosely correlated with truth (a plausible classifier)."""
+    truth = rng.integers(0, 2, n)
+    scores = np.clip(truth * 0.55 + rng.normal(0.25, 0.25, n), 0, 1)
+    return scores, truth
+
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("target", PRECISION_TARGETS)
+def test_batch_matches_faithful(seed, target):
+    rng = np.random.default_rng(seed)
+    scores, truth = _rand_scores(rng, 300)
+    lo, hi = compute_thresholds(lambda _: scores, None, truth, target)
+    blo, bhi = compute_thresholds_batch(scores[None], truth, [target])
+    assert lo == pytest.approx(blo[0, 0])
+    assert hi == pytest.approx(bhi[0, 0])
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from(PRECISION_TARGETS))
+def test_batch_matches_faithful_hypothesis(seed, target):
+    rng = np.random.default_rng(seed)
+    scores, truth = _rand_scores(rng, 120)
+    lo, hi = compute_thresholds(lambda _: scores, None, truth, target)
+    blo, bhi = compute_thresholds_batch(scores[None], truth, [target])
+    assert lo == blo[0, 0] and hi == bhi[0, 0]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000))
+def test_precision_guarantee(seed):
+    """If a non-trivial p_high was chosen, the positive-certain precision
+    at p_high exceeds the target on the calibration data (resp. >= for the
+    negative side at p_low) — Algorithm 1's contract."""
+    rng = np.random.default_rng(seed)
+    scores, truth = _rand_scores(rng, 250)
+    target = 0.95
+    lo, hi = compute_thresholds(lambda _: scores, None, truth, target)
+    if hi < 1.0:
+        pred = scores >= hi
+        prec = (pred & (truth == 1)).sum() / max(pred.sum(), 1)
+        assert prec > target
+    if lo > 0.0:
+        pred = scores <= lo
+        prec = (pred & (truth == 0)).sum() / max(pred.sum(), 1)
+        assert prec >= target
+
+
+def test_degenerate_models():
+    """Constant scorers never satisfy a high target -> full-uncertain."""
+    truth = np.array([0, 1] * 50)
+    scores = np.full(100, 0.5)
+    lo, hi = compute_thresholds(lambda _: scores, None, truth, 0.99)
+    assert lo == 0.0 and hi == 1.0  # nothing certain
+
+    perfect = truth.astype(float)
+    lo, hi = compute_thresholds(lambda _: perfect, None, truth, 0.95)
+    assert hi <= 0.95 and lo >= 0.05  # everything certain

@@ -1,0 +1,102 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.alc import alc, average_throughput, best_matching, speedup
+from repro.core.costs import CostProfile, rep_cost_s
+from repro.core.transforms import (Representation, apply_transform,
+                                   color_transform, representation_space,
+                                   resize_area)
+
+
+# ------------------------------------------------------------ transforms ---
+def test_resize_area_box_filter():
+    img = jnp.arange(16.0).reshape(1, 4, 4, 1)
+    out = resize_area(img, 2)
+    expect = np.array([[2.5, 4.5], [10.5, 12.5]])
+    np.testing.assert_allclose(np.asarray(out)[0, :, :, 0], expect)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1000))
+def test_resize_preserves_mean(seed):
+    rng = np.random.default_rng(seed)
+    img = jnp.asarray(rng.random((2, 16, 16, 3), np.float32))
+    for res in (2, 4, 8, 16):
+        out = resize_area(img, res)
+        np.testing.assert_allclose(np.asarray(out).mean(),
+                                   np.asarray(img).mean(), atol=1e-6)
+
+
+def test_color_transforms():
+    img = jnp.asarray(np.random.default_rng(0).random((1, 4, 4, 3),
+                                                      np.float32))
+    assert color_transform(img, "rgb").shape[-1] == 3
+    for c in ("r", "g", "b", "gray"):
+        assert color_transform(img, c).shape[-1] == 1
+    np.testing.assert_allclose(
+        np.asarray(color_transform(img, "g"))[..., 0],
+        np.asarray(img)[..., 1])
+
+
+def test_representation_values():
+    r = Representation(30, "rgb")
+    assert r.values == 2700      # paper §VII-D: 30x30x3 = 2,700 values
+    assert Representation(224, "rgb").values == 150528
+    space = representation_space([30, 60, 120, 224])
+    assert len(space) == 20      # 4 resolutions x 5 color reps
+
+
+def test_apply_transform_shapes():
+    img = jnp.zeros((2, 64, 64, 3))
+    assert apply_transform(img, Representation(16, "gray")).shape \
+        == (2, 16, 16, 1)
+
+
+# ------------------------------------------------------------------ costs --
+def test_scenario_cost_semantics():
+    reps = [Representation(8, "gray"), Representation(32, "rgb")]
+    prof = CostProfile.modeled({}, reps, base_hw=32)
+    r = reps[0]
+    assert rep_cost_s(prof, r, "INFER_ONLY", True) == 0.0
+    camera = rep_cost_s(prof, r, "CAMERA", True)
+    ongoing = rep_cost_s(prof, r, "ONGOING", True)
+    archive_first = rep_cost_s(prof, r, "ARCHIVE", True)
+    archive_later = rep_cost_s(prof, r, "ARCHIVE", False)
+    assert camera == prof.transform_s[r.name]
+    assert ongoing == prof.load_rep_s[r.name]
+    assert archive_first == prof.load_full_s + prof.transform_s[r.name]
+    assert archive_later == prof.transform_s[r.name]
+    # smaller representation loads faster under ONGOING
+    assert prof.load_rep_s[reps[0].name] < prof.load_rep_s[reps[1].name]
+
+
+# -------------------------------------------------------------------- ALC --
+def test_alc_rectangle():
+    # single point (acc=1, thr=5) over [0, 1] -> area 5
+    assert alc([1.0], [5.0], 0.0, 1.0) == pytest.approx(5.0)
+    assert average_throughput([1.0], [5.0], 0.0, 1.0) == pytest.approx(5.0)
+
+
+def test_alc_step():
+    acc = [0.5, 1.0]
+    thr = [10.0, 2.0]
+    # [0,0.5] at 10 fps, (0.5,1.0] at 2 fps
+    assert alc(acc, thr, 0.0, 1.0) == pytest.approx(0.5 * 10 + 0.5 * 2)
+
+
+def test_speedup_identity_and_ratio():
+    acc = [0.6, 0.9]
+    thr = [8.0, 1.0]
+    assert speedup(acc, thr, acc, thr) == pytest.approx(1.0)
+    thr2 = [4.0, 0.5]
+    assert speedup(acc, thr, acc, thr2) == pytest.approx(2.0)
+
+
+def test_best_matching():
+    acc = np.array([0.95, 0.90, 0.85])
+    thr = np.array([1.0, 5.0, 50.0])
+    i = best_matching(acc, thr, 0.9)
+    assert acc[i] >= 0.9 and thr[i] == 5.0
+    assert best_matching(acc, thr, 0.99) is None
