@@ -1,0 +1,257 @@
+"""Cascade-space evaluation + representation-transform throughput bench
+(referenced by core/cascade.py; starts the perf trajectory for this PR's
+two subsystems). Writes ``BENCH_cascade_eval.json`` at the repo root.
+
+  PYTHONPATH=src python -m benchmarks.bench_eval_speed [--quick]
+
+Measured:
+  1. evaluate->Pareto-select end-to-end, dense (evaluate_cascades +
+     pareto_indices over the full N-cascade arrays — the seed workflow)
+     vs streaming (evaluate_cascades_streaming: chunked jitted blocks
+     folded into the streaming frontier; never materializes N arrays).
+     Same grid, identical frontier, cascades/sec compared.
+  2. the streaming evaluator on a ~10x larger cascade space, with peak
+     traced memory required to stay under the dense base-grid peak.
+  3. transform throughput: one progressive pyramid pass materializing
+     every representation (core/transforms.materialize_representations)
+     vs the seed's per-representation from-base path, in images/sec and
+     analytic bytes moved.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+import tracemalloc
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core.cascade import (evaluate_cascades,                 # noqa: E402
+                                evaluate_cascades_streaming)
+from repro.core.costs import CostProfile                           # noqa: E402
+from repro.core.pareto import pareto_indices                       # noqa: E402
+from repro.core.thresholds import compute_thresholds_batch         # noqa: E402
+from repro.core.transforms import (Representation,                 # noqa: E402
+                                   apply_transform,
+                                   materialize_representations,
+                                   pyramid_bytes_moved,
+                                   representation_space,
+                                   transform_cost)
+
+OUT = Path(__file__).resolve().parents[1] / "BENCH_cascade_eval.json"
+TARGETS = (0.91, 0.93, 0.95, 0.97, 0.99)
+
+
+def make_grid(m_models: int, n_img: int = 1000, seed: int = 0):
+    """Synthetic paper-scale evaluation state (scores already cached —
+    the regime §V-E measures)."""
+    rng = np.random.default_rng(seed)
+    truth = rng.integers(0, 2, n_img)
+    scores = np.clip(truth[None] * 0.4
+                     + rng.normal(0.3, 0.25, (m_models, n_img)),
+                     0, 1).astype(np.float32)
+    p_low, p_high = compute_thresholds_batch(scores, truth, list(TARGETS))
+    reps = [Representation([28, 56, 112, 224][j % 4],
+                           ["rgb", "r", "g", "b", "gray"][j % 5])
+            for j in range(m_models)]
+    reps[-1] = Representation(224, "rgb")
+    infer = rng.uniform(1e-5, 1e-2, m_models)
+    profile = CostProfile.modeled({}, list(set(reps)), 224)
+    return dict(scores=scores, truth=truth, p_low=p_low, p_high=p_high,
+                reps=reps, infer=infer, profile=profile,
+                trusted=m_models - 1)
+
+
+def n_cascades(m: int, t: int = len(TARGETS)) -> int:
+    return m + (m * t) * m + (m * t) * (m * t)
+
+
+def _traced_peak(fn) -> int:
+    """Traced numpy peak bytes of one run (memory is measured in a
+    SEPARATE run from timing: tracemalloc inflates python-heavy code)."""
+    tracemalloc.start()
+    fn()
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    return int(peak)
+
+
+def bench_dense(grid) -> dict:
+    def evaluate():
+        return evaluate_cascades(
+            grid["scores"], grid["truth"], grid["p_low"], grid["p_high"],
+            grid["reps"], grid["infer"], grid["profile"], "CAMERA",
+            trusted=grid["trusted"])
+    t0 = time.perf_counter()
+    sp = evaluate()
+    t_eval = time.perf_counter() - t0
+    fr = pareto_indices(sp.acc, sp.throughput)
+    dt = time.perf_counter() - t0
+    peak = _traced_peak(evaluate)
+    # the select pass adds the lexsort key/order arrays over all N
+    peak += 3 * 8 * len(sp)
+    return {
+        "n_cascades": int(sp.evaluated),
+        "eval_s": round(t_eval, 3),
+        "pareto_select_s": round(dt - t_eval, 3),
+        "total_s": round(dt, 3),
+        "cascades_per_s": round(sp.evaluated / dt),
+        "peak_bytes": int(peak),
+        "frontier": sorted((int(sp.kind[i]), int(sp.i1[i]), int(sp.i2[i]))
+                           for i in fr),
+    }
+
+
+def bench_streaming(grid, chunk: int) -> dict:
+    def run():
+        return evaluate_cascades_streaming(
+            grid["scores"], grid["truth"], grid["p_low"], grid["p_high"],
+            grid["reps"], grid["infer"], grid["profile"], "CAMERA",
+            trusted=grid["trusted"], chunk=chunk)
+    t0 = time.perf_counter()
+    st = run()
+    dt = time.perf_counter() - t0
+    peak = _traced_peak(run)
+    m = len(grid["reps"])
+    a_dim = m * len(TARGETS)
+    n_img = grid["scores"].shape[1]
+    # device buffers tracemalloc cannot see: the (A,I)/(M,I) constants
+    # plus the in-flight (chunk, B) blocks — analytic, conservative
+    device_bytes = (3 * a_dim * n_img + 2 * m * n_img) * 4 \
+        + 6 * chunk * a_dim * 4
+    return {
+        "n_cascades": int(st.evaluated),
+        "chunk": chunk,
+        "total_s": round(dt, 3),
+        "cascades_per_s": round(st.evaluated / dt),
+        "peak_traced_bytes": int(peak),
+        "peak_bytes": int(peak + device_bytes),
+        "frontier": sorted((int(st.kind[i]), int(st.i1[i]), int(st.i2[i]))
+                           for i in range(len(st))),
+    }
+
+
+def bench_transforms(n_img: int = 192, base_hw: int = 64,
+                     repeats: int = 5) -> dict:
+    """Pyramid (one progressive pass for ALL reps) vs the seed per-rep
+    from-base path, on the jnp compute path both use in-core."""
+    import jax
+    import jax.numpy as jnp
+    rng = np.random.default_rng(0)
+    imgs = jnp.asarray(rng.integers(0, 256, (n_img, base_hw, base_hw, 3))
+                       .astype(np.float32) / 256.0)
+    reps = representation_space([base_hw // 8, base_hw // 4, base_hw // 2])
+
+    def per_rep():
+        return [apply_transform(imgs, r) for r in reps]
+
+    def pyramid():
+        return materialize_representations(imgs, reps)
+
+    for fn in (per_rep, pyramid):        # warm the jit caches
+        jax.block_until_ready(fn())
+    t_naive = min(_time(per_rep) for _ in range(repeats))
+    t_pyr = min(_time(pyramid) for _ in range(repeats))
+    naive_bytes = sum(transform_cost(r, base_hw)["bytes"] for r in reps)
+    pyr_bytes = pyramid_bytes_moved(reps, base_hw)
+    return {
+        "n_images": n_img, "base_hw": base_hw, "n_reps": len(reps),
+        "per_rep_s": round(t_naive, 4),
+        "pyramid_s": round(t_pyr, 4),
+        "per_rep_images_per_s": round(n_img / t_naive),
+        "pyramid_images_per_s": round(n_img / t_pyr),
+        "speedup": round(t_naive / t_pyr, 2),
+        "bytes_moved_per_image_naive": naive_bytes,
+        "bytes_moved_per_image_pyramid": pyr_bytes,
+        "bytes_moved_ratio": round(naive_bytes / pyr_bytes, 2),
+    }
+
+
+def _time(fn) -> float:
+    import jax
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn())
+    return time.perf_counter() - t0
+
+
+def _frontiers_match(a, b, tol=1e-5) -> bool:
+    return set(map(tuple, a)) == set(map(tuple, b))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller grids (CI smoke)")
+    args = ap.parse_args()
+    m_base = 120 if args.quick else 360
+    m_large = 380 if args.quick else 1140   # ~10x the cascade space
+
+    import jax
+    report = {"backend": jax.default_backend(),
+              "targets_per_model": len(TARGETS)}
+
+    print(f"[bench] dense vs streaming on base grid (M={m_base}, "
+          f"N={n_cascades(m_base):,}) ...")
+    grid = make_grid(m_base)
+    dense = bench_dense(grid)
+    stream = bench_streaming(grid, chunk=512)
+    same_frontier = _frontiers_match(dense["frontier"], stream["frontier"])
+    speedup = stream["cascades_per_s"] / dense["cascades_per_s"]
+    print(f"  dense   : {dense['total_s']}s "
+          f"({dense['cascades_per_s']:,}/s, eval {dense['eval_s']}s + "
+          f"select {dense['pareto_select_s']}s)")
+    print(f"  stream  : {stream['total_s']}s "
+          f"({stream['cascades_per_s']:,}/s) "
+          f"frontier match={same_frontier}")
+    print(f"  end-to-end speedup: {speedup:.2f}x")
+
+    print(f"[bench] streaming on ~10x space (M={m_large}, "
+          f"N={n_cascades(m_large):,}) ...")
+    grid_l = make_grid(m_large, seed=1)
+    stream_l = bench_streaming(grid_l, chunk=256)
+    scale = stream_l["n_cascades"] / dense["n_cascades"]
+    under_dense_peak = (stream_l["peak_bytes"]
+                        <= dense["peak_bytes"])
+    print(f"  {stream_l['total_s']}s ({stream_l['cascades_per_s']:,}/s), "
+          f"{scale:.1f}x space, peak {stream_l['peak_bytes']/1e6:.0f}MB "
+          f"vs dense base peak {dense['peak_bytes']/1e6:.0f}MB "
+          f"(under: {under_dense_peak})")
+
+    print("[bench] transform pyramid vs per-rep ...")
+    tf = bench_transforms()
+    print(f"  per-rep {tf['per_rep_images_per_s']:,} img/s, pyramid "
+          f"{tf['pyramid_images_per_s']:,} img/s -> {tf['speedup']}x "
+          f"(bytes ratio {tf['bytes_moved_ratio']}x)")
+
+    dense.pop("frontier")
+    stream.pop("frontier")
+    stream_l.pop("frontier")
+    report.update({
+        "eval": {
+            "grid_base": {"models": m_base, "images": 1000,
+                          "n_cascades": n_cascades(m_base)},
+            "dense_evaluate_select": dense,
+            "streaming_same_grid": stream,
+            "frontier_matches_dense": same_frontier,
+            "end_to_end_speedup_x": round(speedup, 2),
+            "grid_large": {"models": m_large, "images": 1000,
+                           "n_cascades": n_cascades(m_large)},
+            "streaming_large_grid": stream_l,
+            "space_scale_x": round(scale, 1),
+            "large_space_under_dense_base_peak": under_dense_peak,
+        },
+        "transform": tf,
+    })
+    # --quick is a CI smoke: small grids are jit-compile-dominated and
+    # not the perf trajectory — never clobber the canonical artifact
+    out = OUT.with_suffix(".quick.json") if args.quick else OUT
+    out.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -51,13 +51,15 @@ def main():
     cap = calibrate_capacity(unc, args.batch_size)
     print(f"level-1 uncertain fraction {unc:.2f} -> level-2 capacity {cap}")
 
+    # passing Representations (not callables) turns on pyramid source
+    # derivation: level inputs come from the previous level's source
+    # tensor instead of re-transforming raw images (DESIGN.md §3.4)
     cascade = jax.jit(lambda imgs: run_cascade_batch(
         imgs,
         [lambda z: cnn_predict_proba(p_fast, z),
          lambda z: cnn_predict_proba(p_full, z)],
         [(0.2, 0.8), (None, None)],
-        [lambda im: apply_transform(im, rep_fast),
-         lambda im: apply_transform(im, rep_full)],
+        [rep_fast, rep_full],
         capacities=[cap]))
 
     def run_batch(payloads):

@@ -13,10 +13,16 @@ charged ONCE per distinct representation per image (§VII-A3). Scenarios:
 The CostProfile holds *measured* per-model/per-representation seconds
 (core benchmark path: measured on this host; TPU-projected constants are
 also provided for the roofline discussion). All times are seconds/image.
+
+Pyramid pricing (DESIGN.md §3): a follow-up level whose resolution divides
+an already-materialized level's resolution is produced from that level, not
+from the raw base image — ``transform_from_s`` prices that *incremental*
+t_transform. Profiles built by hand (without the modeled bandwidth fields)
+degrade gracefully to the seed's from-base pricing.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Mapping
 
 from repro.core.transforms import Representation
@@ -42,11 +48,19 @@ class CostProfile:
     transform_s[rep.name]    : seconds/image to produce rep from raw
     load_rep_s[rep.name]     : seconds/image to load rep from storage
     load_full_s              : seconds/image to load the full-size raw image
+
+    The optional pyramid fields enable incremental t_transform pricing
+    (``transform_from_s``); ``modeled`` fills them in, hand-built profiles
+    may leave them None and keep the seed's from-base pricing.
     """
     infer_s: Mapping[str, float]
     transform_s: Mapping[str, float]
     load_rep_s: Mapping[str, float]
     load_full_s: float
+    transform_bw: float | None = None        # bytes/s of the resize path
+    transform_overhead_s: float = TRANSFORM_OVERHEAD_S
+    byte_scale: float = 1.0                  # corpus -> paper-regime bytes
+    base_hw: int | None = None
 
     @staticmethod
     def modeled(model_infer_s: Mapping[str, float],
@@ -63,21 +77,42 @@ class CostProfile:
             load_rep_s={r.name: LOAD_REP_OVERHEAD_S
                         + r.bytes * scale / SSD_BW for r in reps},
             load_full_s=LOAD_FULL_OVERHEAD_S + full_bytes / SSD_BW,
+            transform_bw=TRANSFORM_BW,
+            transform_overhead_s=TRANSFORM_OVERHEAD_S,
+            byte_scale=scale,
+            base_hw=base_hw,
         )
+
+    def transform_from_s(self, rep: Representation,
+                         source_hw: int | None) -> float:
+        """Incremental t_transform: produce ``rep`` from an already
+        materialized RGB pyramid level at ``source_hw``. Falls back to the
+        from-base price when the profile lacks bandwidth fields, when no
+        source is given, or when the source cannot serve this resolution."""
+        if (self.transform_bw is None or source_hw is None
+                or source_hw % rep.resolution != 0
+                or (self.base_hw is not None and source_hw >= self.base_hw)):
+            return self.transform_s[rep.name]
+        read = source_hw * source_hw * 3 * self.byte_scale
+        return self.transform_overhead_s \
+            + (read + rep.bytes * self.byte_scale) / self.transform_bw
 
 
 def rep_cost_s(profile: CostProfile, rep: Representation,
-               scenario: str, first_rep: bool) -> float:
+               scenario: str, first_rep: bool,
+               source_hw: int | None = None) -> float:
     """Data-handling cost of materializing ``rep`` for one image under
     ``scenario``. first_rep: True when this is the first representation the
-    cascade touches (ARCHIVE pays the full-size load exactly once)."""
+    cascade touches (ARCHIVE pays the full-size load exactly once).
+    source_hw: resolution of the nearest already-materialized RGB pyramid
+    level, when the executor can derive ``rep`` from it (DESIGN.md §3)."""
     if scenario == "INFER_ONLY":
         return 0.0
     if scenario == "ARCHIVE":
         return (profile.load_full_s if first_rep else 0.0) \
-            + profile.transform_s[rep.name]
+            + profile.transform_from_s(rep, source_hw)
     if scenario == "ONGOING":
         return profile.load_rep_s[rep.name]
     if scenario == "CAMERA":
-        return profile.transform_s[rep.name]
+        return profile.transform_from_s(rep, source_hw)
     raise ValueError(scenario)

@@ -10,6 +10,19 @@ Capacity per level is a knob calibrated offline (e.g. the p99 uncertain
 fraction measured on I_config); overflow items keep level-l's forced
 decision (o >= 0.5) and are counted in the returned stats.
 
+Representation derivation (DESIGN.md §3): when levels are given as
+``Representation``s instead of opaque transform callables, each level's
+input is derived from the nearest already-materialized pyramid level
+rather than by re-gathering and re-transforming the raw base images. The
+executor maintains a full-batch RGB pyramid cache: running a level
+materializes its resolution (pooled from the smallest cached level that
+divides it — box filters nest, so derived inputs are exactly what
+apply_transform would produce from raw), and later levels gather rows
+from that level's (much smaller) tensor. For a 224px base with 56/28px
+levels that is a 16-64x cut in gathered bytes, and the bytes read per
+level are exactly what core/cascade's pyramid cost matrices price
+(``derivation_sources``).
+
 Everything here is jit-compatible; model_fns[l] maps the level's input
 representation tensor (already transformed) to probabilistic scores.
 """
@@ -20,23 +33,64 @@ from typing import Callable, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core.transforms import (Representation, color_transform,
+                                   resize_area)
+
+
+def derivation_sources(res_seq: list[int], base: int) -> list[int]:
+    """Source resolution each level's representation derives from: the
+    smallest already-materialized pyramid level it divides (base is always
+    materialized; running a level materializes its resolution). EXACTLY
+    the policy core/cascade._cost_matrices prices — the executor and the
+    cost model agree on bytes read per level."""
+    out = []
+    materialized = {base}
+    for r in res_seq:
+        usable = [m for m in materialized if m % r == 0]
+        out.append(min(usable) if usable else base)
+        materialized.add(r)
+    return out
+
 
 def run_cascade_batch(images, model_fns: Sequence[Callable],
                       thresholds: Sequence[tuple[float | None,
                                                  float | None]],
-                      transforms: Sequence[Callable],
-                      capacities: Sequence[int]):
+                      transforms, capacities: Sequence[int]):
     """images: raw batch (B, H, W, 3). Returns (labels (B,), stats).
     thresholds[l] = (p_low, p_high); final level may be (None, None).
-    capacities[l]: static sub-batch size for level l >= 1."""
+    transforms: per-level transform callables, or per-level
+    ``Representation``s (enables pyramid source derivation — see module
+    docstring). capacities[l]: static sub-batch size for level l >= 1."""
+    pyramid = (len(transforms) > 0
+               and isinstance(transforms[0], Representation))
     b = images.shape[0]
     labels = jnp.zeros((b,), jnp.int32)
     decided = jnp.zeros((b,), bool)
     overflow = jnp.zeros((), jnp.int32)
     levels_used = jnp.zeros((len(model_fns),), jnp.int32)
 
+    if pyramid:
+        reps: list[Representation] = list(transforms)
+        res_seq = [r.resolution for r in reps]
+        # full-batch RGB pyramid cache: each level's resolution is pooled
+        # from the nearest (smallest) materialized level, then cached for
+        # later levels — total extra memory is a geometric tail of the
+        # base batch, and bytes read per level match the cost model's
+        # derivation_sources policy
+        pyr_cache = {images.shape[1]: images}
+
+        def _pyramid_level(res: int):
+            if res not in pyr_cache:
+                usable = [m for m in pyr_cache if m % res == 0]
+                src = min(usable) if usable else images.shape[1]
+                pyr_cache[res] = resize_area(pyr_cache[src], res)
+            return pyr_cache[res]
+
+        rep0 = color_transform(_pyramid_level(res_seq[0]), reps[0].color)
+    else:
+        rep0 = transforms[0](images)
+
     # level 0 on the full batch
-    rep0 = transforms[0](images)
     o = model_fns[0](rep0)
     lo, hi = thresholds[0]
     if lo is None:
@@ -49,7 +103,6 @@ def run_cascade_batch(images, model_fns: Sequence[Callable],
     decided = certain
     levels_used = levels_used.at[0].set(b)
 
-    active_idx = jnp.arange(b)
     active_mask = ~decided
     for l in range(1, len(model_fns)):
         cap = int(capacities[l - 1])
@@ -58,8 +111,13 @@ def run_cascade_batch(images, model_fns: Sequence[Callable],
         take = order[:cap]
         valid = active_mask[take]
         overflow = overflow + jnp.sum(active_mask) - jnp.sum(valid)
-        sub = jnp.take(images, take, axis=0)
-        repl = transforms[l](sub)
+        if pyramid:
+            # gather the (small) already-derived rows, not raw images
+            sub = jnp.take(_pyramid_level(res_seq[l]), take, axis=0)
+            repl = color_transform(sub, reps[l].color)
+        else:
+            sub = jnp.take(images, take, axis=0)
+            repl = transforms[l](sub)
         o = model_fns[l](repl)
         levels_used = levels_used.at[l].set(jnp.sum(valid.astype(jnp.int32)))
         lo, hi = thresholds[l]

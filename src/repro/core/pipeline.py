@@ -18,9 +18,11 @@ import numpy as np
 
 from repro.configs.base import TahomaCNNConfig
 from repro.core import thresholds as thr_mod
-from repro.core.cascade import CascadeSpace, evaluate_cascades
+from repro.core.cascade import (CascadeSpace, evaluate_cascades,
+                                evaluate_cascades_streaming)
 from repro.core.costs import CostProfile
-from repro.core.transforms import Representation, apply_transform
+from repro.core.transforms import (Representation, apply_transform,
+                                   materialize_representations)
 from repro.models.cnn import bce_loss, cnn_predict_proba, init_cnn
 from repro.train.optimizer import adamw
 
@@ -56,8 +58,15 @@ class ModelBank:
 
     def score_matrix(self, raw_images) -> np.ndarray:
         """(M, I): inference once per model (paper §V-D) — cached scores
-        power every downstream cascade simulation."""
-        return np.stack([e.predict(raw_images) for e in self.entries])
+        power every downstream cascade simulation. All representations
+        the bank needs are materialized in ONE progressive pyramid pass
+        (core/transforms.materialize_representations) instead of each
+        model re-transforming from the raw base images."""
+        rep_cache = materialize_representations(
+            jnp.asarray(raw_images), [e.rep for e in self.entries])
+        return np.stack([
+            np.asarray(cnn_predict_proba(e.params, rep_cache[e.rep]))
+            for e in self.entries])
 
 
 # ------------------------------------------------------------- training ----
@@ -93,10 +102,10 @@ def train_model_grid(train_x, train_y, archs: Sequence[TahomaCNNConfig],
     """The A x F grid (paper §V-B) + one trusted heavy model (ResNet50
     stand-in: deepest/widest CNN at full resolution, full color)."""
     bank = ModelBank()
-    rep_cache: dict[Representation, np.ndarray] = {}
-    for rep in reps:
-        rep_cache[rep] = np.asarray(
-            apply_transform(jnp.asarray(train_x), rep))
+    # one progressive pyramid pass materializes every training input
+    rep_cache = {rep: np.asarray(x) for rep, x in
+                 materialize_representations(jnp.asarray(train_x),
+                                             reps).items()}
     for ai, arch0 in enumerate(archs):
         for rep in reps:
             arch = TahomaCNNConfig(
@@ -153,19 +162,25 @@ class TahomaSystem:
     targets: tuple
 
     def cascade_space(self, scenario: str, *, max_level: int = 3,
-                      reps_subset=None) -> CascadeSpace:
+                      reps_subset=None, streaming: bool = False,
+                      **stream_kw) -> CascadeSpace:
         """Re-cost + re-evaluate all cascades under a deployment scenario
-        (cheap: pure linear algebra over cached scores — §V-E)."""
+        (cheap: pure linear algebra over cached scores — §V-E).
+        streaming=True runs the bounded-memory chunked evaluator and
+        returns only the surviving (Pareto/top-K) cascades; extra kwargs
+        (chunk, keep, top_k, ...) pass through."""
         keep = None
         if reps_subset is not None:
             keep = [i for i, e in enumerate(self.bank.entries)
                     if e.rep in reps_subset or e.trusted]
         infer = np.array([self.infer_s[n] for n in self.bank.names])
-        return evaluate_cascades(
+        evaluate = (evaluate_cascades_streaming if streaming
+                    else evaluate_cascades)
+        return evaluate(
             self.eval_scores, self.eval_truth, self.p_low, self.p_high,
             self.bank.reps, infer, self.profile, scenario,
             self.bank.trusted_index, max_level=max_level,
-            first_level_models=keep)
+            first_level_models=keep, **stream_kw)
 
 
 def initialize_system(train_split, config_split, eval_split,

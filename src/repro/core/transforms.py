@@ -80,11 +80,91 @@ def representation_space(resolutions: Iterable[int],
     return [Representation(r, c) for r in resolutions for c in colors]
 
 
-# analytic per-image transform FLOPs/bytes (feeds core/costs.py)
-def transform_cost(rep: Representation, base_hw: int) -> dict:
-    read = base_hw * base_hw * 3          # bytes in (uint8)
-    flops = base_hw * base_hw * 3         # box-filter adds
+# ------------------------------------------------- representation pyramid --
+# Box filters nest: area-averaging base->r1->r2 equals base->r2 whenever the
+# factors divide (the paper's resolution ladders all do).  Materializing the
+# whole A x F grid's representations therefore never needs to touch the raw
+# base image more than once — each resolution is derived from the nearest
+# (smallest) already-materialized resolution, and every color representation
+# of a resolution shares that one pooled RGB tensor.
+
+@dataclass(frozen=True)
+class PyramidStep:
+    """Produce the ``resolution`` RGB level from the ``source`` level."""
+    resolution: int
+    source: int
+
+
+def plan_pyramid(resolutions: Iterable[int], base_hw: int
+                 ) -> list[PyramidStep]:
+    """Progressive downscale plan over distinct resolutions <= base_hw.
+    Each level is derived from the smallest already-materialized resolution
+    it divides (base_hw is always materialized). Raises if some resolution
+    cannot nest under base_hw at all."""
+    steps: list[PyramidStep] = []
+    avail = [base_hw]
+    for r in sorted({int(r) for r in resolutions}, reverse=True):
+        if r == base_hw:
+            continue
+        src = min((a for a in avail if a > r and a % r == 0),
+                  default=None)
+        if src is None:
+            raise ValueError(f"resolution {r} does not nest under "
+                             f"{sorted(avail)}")
+        steps.append(PyramidStep(r, src))
+        avail.append(r)
+    return steps
+
+
+def materialize_pyramid(img, resolutions: Iterable[int]):
+    """One progressive pass: raw RGB (B,H,H,3) -> {resolution: RGB tensor}.
+    Bit-identical to ``resize_area(img, r)`` from base when pixel values
+    are exactly representable dyadics (raw uint8 counts or k/256 floats:
+    sums stay exact in f32 and the nested factors are powers of two in
+    every grid this repo uses); within 1 ulp otherwise."""
+    base = img.shape[1]
+    levels = {base: img}
+    for step in plan_pyramid(resolutions, base):
+        levels[step.resolution] = resize_area(levels[step.source],
+                                              step.resolution)
+    return levels
+
+
+def materialize_representations(img, reps: Iterable[Representation]):
+    """All representations a cascade (or the full A x F grid) needs, in one
+    progressive pass: {Representation: tensor}. Color projections reuse the
+    shared pooled RGB level of their resolution."""
+    reps = list(reps)
+    levels = materialize_pyramid(img, (r.resolution for r in reps))
+    return {rep: color_transform(levels[rep.resolution], rep.color)
+            for rep in set(reps)}
+
+
+# analytic per-image transform FLOPs/bytes (feeds core/costs.py).
+# source_hw prices the *incremental* pyramid transform: reading an already
+# materialized source level instead of the full-size base image.
+def transform_cost(rep: Representation, base_hw: int,
+                   source_hw: int | None = None) -> dict:
+    src = base_hw if source_hw is None else source_hw
+    read = src * src * 3                  # bytes in (uint8)
+    flops = src * src * 3                 # box-filter adds
     if rep.color == "gray":
         flops += rep.resolution ** 2 * 3
     write = rep.bytes
     return {"flops": float(flops), "bytes": float(read + write)}
+
+
+def pyramid_bytes_moved(reps: Iterable[Representation], base_hw: int
+                        ) -> float:
+    """Total analytic bytes for materializing all reps progressively
+    (vs. ``sum(transform_cost(r, base_hw)['bytes'])`` for the naive
+    one-rep-at-a-time path)."""
+    reps = list(reps)
+    total = 0.0
+    for step in plan_pyramid((r.resolution for r in reps), base_hw):
+        total += step.source ** 2 * 3 + step.resolution ** 2 * 3
+    for rep in set(reps):
+        if rep.color == "rgb":
+            continue                      # shares the pooled RGB level
+        total += rep.resolution ** 2 * 3 + rep.bytes
+    return total

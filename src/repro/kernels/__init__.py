@@ -1,3 +1,13 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+
+def resolve_interpret(interpret) -> bool:
+    """Shared interpret-mode resolver: ``None`` means "compile on TPU,
+    interpret elsewhere" — so callers never silently run interpreted
+    kernels on real hardware (nor try to Mosaic-compile on CPU)."""
+    if interpret is None:
+        import jax
+        return jax.default_backend() != "tpu"
+    return bool(interpret)

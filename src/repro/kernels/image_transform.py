@@ -1,14 +1,26 @@
-"""Fused physical-representation transform kernel (paper §V-B / §VI).
+"""Fused physical-representation transform kernels (paper §V-B / §VI).
 
-One HBM->VMEM pass per image tile performs: area-average resize
-(base_hw -> res), color projection (RGB keep / channel select / grayscale —
-all expressed as a length-3 channel weight matrix), and normalization.
-This is THE data-handling hot spot the paper's cost model prices
-(t_transform); fusing the three stages removes two HBM round-trips vs the
-naive resize->select->normalize chain.
+``fused_transform`` — one HBM->VMEM pass per image tile performs:
+area-average resize (base_hw -> res), color projection (RGB keep / channel
+select / grayscale — all expressed as a length-3 channel weight matrix),
+and normalization. This is THE data-handling hot spot the paper's cost
+model prices (t_transform); fusing the three stages removes two HBM
+round-trips vs the naive resize->select->normalize chain.
+
+``fused_pyramid_transform`` — the multi-output variant: ONE HBM read of
+the base image emits every (resolution, color) representation a cascade
+(or the whole A x F grid) needs. Resolutions are pooled progressively in
+VMEM (each level from the nearest already-materialized level, mirroring
+core/transforms.plan_pyramid), so HBM traffic is one base read plus the
+(much smaller) representation writes — vs one full base read PER
+representation on the naive path.
 
 Grid: one program per batch element (images are small: 224*224*3 f32 =
-602 KB — fits VMEM comfortably with the output tile).
+602 KB — fits VMEM comfortably with the output tiles).
+
+``interpret=None`` (default) resolves by backend: compiled Mosaic on TPU,
+interpret mode elsewhere — callers no longer get silently-interpreted
+kernels on TPU (the seed's interpret=True-by-default compile bug).
 """
 from __future__ import annotations
 
@@ -17,6 +29,17 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.core.transforms import plan_pyramid
+from repro.kernels import resolve_interpret
+
+
+def _pool(img, res: int):
+    """(H, W, 3) -> (res, res, 3) area average; factors guaranteed to nest
+    by plan_pyramid."""
+    h = img.shape[0]
+    f = h // res
+    return jnp.mean(img.reshape(res, f, res, f, 3), axis=(1, 3))
 
 
 def _transform_kernel(img_ref, cw_ref, out_ref, *, factor: int,
@@ -34,7 +57,7 @@ def _transform_kernel(img_ref, cw_ref, out_ref, *, factor: int,
 
 def fused_transform(images, channel_weights, res: int,
                     mean: float = 0.5, std: float = 0.25,
-                    interpret: bool = True):
+                    interpret: bool | None = None):
     """images (B, H, H, 3) float32; channel_weights (3, C') encodes the
     color representation (identity columns / unit column / gray weights).
     -> (B, res, res, C') normalized."""
@@ -55,5 +78,60 @@ def fused_transform(images, channel_weights, res: int,
         out_specs=pl.BlockSpec((1, res, res, out_ch),
                                lambda i: (i, 0, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, res, res, out_ch), jnp.float32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(images.astype(jnp.float32), channel_weights.astype(jnp.float32))
+
+
+def _pyramid_kernel(img_ref, *refs, base: int, plan, out_meta,
+                    mean: float, inv_std: float):
+    """refs = (cw_ref_0..cw_ref_{n-1}, out_ref_0..out_ref_{n-1}).
+    plan: ((resolution, source), ...) progressive pooling steps.
+    out_meta: ((res_i, out_ch_i), ...) per output."""
+    n = len(out_meta)
+    cw_refs, out_refs = refs[:n], refs[n:]
+    img = img_ref[0]                                   # (H, H, 3)
+    levels = {base: img}
+    for res, src in plan:                              # unrolled at trace
+        levels[res] = _pool(levels[src], res)
+    for i, (res, out_ch) in enumerate(out_meta):
+        pooled = levels[res]
+        cw = cw_refs[i][...]                           # (3, out_ch)
+        proj = jax.lax.dot_general(
+            pooled.reshape(res * res, 3), cw,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).reshape(res, res, out_ch)
+        out_refs[i][0] = (proj - mean) * inv_std
+
+
+def fused_pyramid_transform(images, rep_specs,
+                            mean: float = 0.5, std: float = 0.25,
+                            interpret: bool | None = None):
+    """Multi-output fused transform: images (B, H, H, 3) float32 ->
+    tuple of (B, res_i, res_i, C'_i) normalized tensors, one per
+    (res, channel_weights) pair in ``rep_specs``, all emitted from a
+    single HBM read of the base image per batch element."""
+    b, h, w, _ = images.shape
+    assert h == w, (h, w)
+    specs = [(int(res), jnp.asarray(cw, jnp.float32))
+             for res, cw in rep_specs]
+    plan = tuple((s.resolution, s.source)
+                 for s in plan_pyramid([r for r, _ in specs], h))
+    out_meta = tuple((res, int(cw.shape[1])) for res, cw in specs)
+    kernel = functools.partial(
+        _pyramid_kernel, base=h, plan=plan, out_meta=out_meta,
+        mean=mean, inv_std=1.0 / std)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=(
+            [pl.BlockSpec((1, h, w, 3), lambda i: (i, 0, 0, 0))]
+            + [pl.BlockSpec((3, ch), lambda i: (0, 0))
+               for _, ch in out_meta]),
+        out_specs=[pl.BlockSpec((1, res, res, ch),
+                                lambda i, _r=res, _c=ch: (i, 0, 0, 0))
+                   for res, ch in out_meta],
+        out_shape=[jax.ShapeDtypeStruct((b, res, res, ch), jnp.float32)
+                   for res, ch in out_meta],
+        interpret=resolve_interpret(interpret),
+    )(images.astype(jnp.float32), *[cw for _, cw in specs])
+    return tuple(out) if isinstance(out, (list, tuple)) else (out,)

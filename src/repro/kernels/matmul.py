@@ -29,8 +29,11 @@ def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int):
 
 
 def matmul(a, b, *, bm: int = 128, bn: int = 128, bk: int = 128,
-           out_dtype=None, interpret: bool = True):
-    """Pads to tile multiples, runs the blocked kernel, slices back."""
+           out_dtype=None, interpret: bool | None = None):
+    """Pads to tile multiples, runs the blocked kernel, slices back.
+    interpret=None: compiled on TPU, interpret mode elsewhere."""
+    from repro.kernels import resolve_interpret
+    interpret = resolve_interpret(interpret)
     m, k = a.shape
     k2, n = b.shape
     assert k == k2

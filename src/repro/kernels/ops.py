@@ -30,7 +30,8 @@ COLOR_WEIGHTS = {
 
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    from repro.kernels import resolve_interpret
+    return resolve_interpret(None)
 
 
 @functools.partial(jax.jit, static_argnames=("res", "color", "backend"))
@@ -40,6 +41,19 @@ def transform_op(images, *, res: int, color: str = "rgb",
     if backend == "ref":
         return _ref.fused_transform_ref(images, cw, res)
     return _it.fused_transform(images, cw, res, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("specs", "backend"))
+def pyramid_transform_op(images, *, specs, backend: str = "pallas"):
+    """Multi-output fused transform. specs: tuple of (res, color) pairs —
+    one output tensor per pair, all from a single pass over the base
+    image (kernels/image_transform.fused_pyramid_transform)."""
+    rep_specs = [(res, jnp.asarray(COLOR_WEIGHTS[color]))
+                 for res, color in specs]
+    if backend == "ref":
+        return _ref.fused_pyramid_transform_ref(images, rep_specs)
+    return _it.fused_pyramid_transform(images, rep_specs,
+                                       interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("backend",))

@@ -14,6 +14,15 @@ def fused_transform_ref(images, channel_weights, res: int,
     return (x - mean) / std
 
 
+def fused_pyramid_transform_ref(images, rep_specs,
+                                mean: float = 0.5, std: float = 0.25):
+    """Oracle for the multi-output pyramid kernel: each representation
+    independently from the base image (the nesting property makes the
+    progressive kernel agree with this)."""
+    return tuple(fused_transform_ref(images, cw, int(res), mean, std)
+                 for res, cw in rep_specs)
+
+
 def matmul_ref(a, b, out_dtype=None):
     out = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
     return out.astype(out_dtype or a.dtype)

@@ -1,0 +1,210 @@
+"""Minimal offline stand-in for `hypothesis`, installed by conftest.py when
+the real package cannot be imported (this container has no network access).
+
+It implements just the surface the property tests in this repo use:
+``given``, ``settings(max_examples=, deadline=)``, ``assume``, and the
+strategies ``integers / floats / booleans / sampled_from / tuples / lists``.
+Generation is plain seeded pseudo-random sampling (no shrinking, no
+database) — deterministic across runs so failures are reproducible. When
+the real hypothesis is installed it always wins (see conftest.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+import random
+import sys
+import types
+
+_SEED = 0x7A40  # fixed: repeatable example streams
+
+
+class _Strategy:
+    """A strategy is just a draw function rnd -> value."""
+
+    def __init__(self, draw, label="strategy"):
+        self._draw = draw
+        self._label = label
+
+    def draw(self, rnd: random.Random):
+        return self._draw(rnd)
+
+    def map(self, fn):
+        return _Strategy(lambda rnd: fn(self._draw(rnd)),
+                         f"{self._label}.map")
+
+    def filter(self, pred, max_tries: int = 1000):
+        def draw(rnd):
+            for _ in range(max_tries):
+                v = self._draw(rnd)
+                if pred(v):
+                    return v
+            raise Unsatisfiable(f"filter on {self._label} never satisfied")
+        return _Strategy(draw, f"{self._label}.filter")
+
+    def __repr__(self):
+        return f"<shim {self._label}>"
+
+
+class Unsatisfiable(Exception):
+    pass
+
+
+class _Assumption(Exception):
+    """Raised by assume(False); the example is silently discarded."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Assumption()
+    return True
+
+
+def integers(min_value=None, max_value=None) -> _Strategy:
+    lo = -(2 ** 31) if min_value is None else int(min_value)
+    hi = 2 ** 31 if max_value is None else int(max_value)
+    return _Strategy(lambda rnd: rnd.randint(lo, hi),
+                     f"integers({lo}, {hi})")
+
+
+def floats(min_value=None, max_value=None, *, allow_nan=None,
+           allow_infinity=None, width=64) -> _Strategy:
+    lo = 0.0 if min_value is None else float(min_value)
+    hi = 1.0 if max_value is None else float(max_value)
+
+    def draw(rnd):
+        # mix uniform draws with the boundary values hypothesis loves
+        r = rnd.random()
+        if r < 0.05:
+            return lo
+        if r < 0.10:
+            return hi
+        return rnd.uniform(lo, hi)
+    return _Strategy(draw, f"floats({lo}, {hi})")
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rnd: rnd.random() < 0.5, "booleans()")
+
+
+def sampled_from(elements) -> _Strategy:
+    pool = list(elements)
+    if not pool:
+        raise ValueError("sampled_from requires a non-empty collection")
+    return _Strategy(lambda rnd: pool[rnd.randrange(len(pool))],
+                     f"sampled_from(<{len(pool)}>)")
+
+
+def tuples(*strategies) -> _Strategy:
+    return _Strategy(lambda rnd: tuple(s.draw(rnd) for s in strategies),
+                     f"tuples(<{len(strategies)}>)")
+
+
+def lists(elements: _Strategy, *, min_size: int = 0,
+          max_size: int | None = None, unique: bool = False) -> _Strategy:
+    cap = min_size + 10 if max_size is None else max_size
+
+    def draw(rnd):
+        n = rnd.randint(min_size, cap)
+        if not unique:
+            return [elements.draw(rnd) for _ in range(n)]
+        out, seen = [], set()
+        for _ in range(1000):
+            if len(out) >= n:
+                break
+            v = elements.draw(rnd)
+            if v not in seen:
+                seen.add(v)
+                out.append(v)
+        return out
+    return _Strategy(draw, f"lists[{min_size},{cap}]")
+
+
+def just(value) -> _Strategy:
+    return _Strategy(lambda rnd: value, "just")
+
+
+def one_of(*strategies) -> _Strategy:
+    flat = []
+    for s in strategies:
+        flat.extend(s if isinstance(s, (list, tuple)) else [s])
+    return _Strategy(lambda rnd: flat[rnd.randrange(len(flat))].draw(rnd),
+                     "one_of")
+
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    """Decorator recording max_examples; order-independent with @given
+    because the attribute rides along __dict__ (functools.wraps copies it)."""
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+class HealthCheck:
+    """Accept any attribute (tests only ever *reference* members)."""
+    def __getattr__(self, name):  # pragma: no cover - trivial
+        return name
+
+    all = classmethod(lambda cls: [])
+
+
+def given(*strategies, **kw_strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper():
+            n = getattr(wrapper, "_shim_max_examples",
+                        getattr(fn, "_shim_max_examples",
+                                DEFAULT_MAX_EXAMPLES))
+            rnd = random.Random(_SEED)
+            ran = 0
+            attempts = 0
+            while ran < n and attempts < n * 50:
+                attempts += 1
+                args = [s.draw(rnd) for s in strategies]
+                kwargs = {k: s.draw(rnd) for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, **kwargs)
+                except _Assumption:
+                    continue
+                except Exception:
+                    sys.stderr.write(
+                        f"[hypothesis-shim] falsifying example "
+                        f"(run {ran}): args={args!r} kwargs={kwargs!r}\n")
+                    raise
+                ran += 1
+        # pytest must not try to inject fixtures for the generated params
+        wrapper.__signature__ = __import__("inspect").Signature([])
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+    return deco
+
+
+def note(message):  # pragma: no cover - debugging aid
+    sys.stderr.write(f"[hypothesis-shim note] {message}\n")
+
+
+def install() -> None:
+    """Register shim modules as `hypothesis` / `hypothesis.strategies`."""
+    if "hypothesis" in sys.modules:
+        return
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.assume = assume
+    mod.note = note
+    mod.HealthCheck = HealthCheck()
+    mod.__version__ = "0.0-shim"
+    mod.__is_shim__ = True
+
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from", "tuples",
+                 "lists", "just", "one_of"):
+        setattr(st, name, globals()[name])
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

@@ -6,6 +6,16 @@ SRC = str(Path(__file__).resolve().parents[1] / "src")
 if SRC not in sys.path:
     sys.path.insert(0, SRC)
 
+_TESTS = str(Path(__file__).resolve().parent)
+if _TESTS not in sys.path:
+    sys.path.insert(0, _TESTS)
+
+try:  # the real hypothesis always wins when installed
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_shim
+    _hypothesis_shim.install()
+
 # NOTE: device count is intentionally NOT forced here — smoke tests run on
 # the single real CPU device. Multi-device tests spawn subprocesses with
 # their own XLA_FLAGS (see tests/_subproc.py).

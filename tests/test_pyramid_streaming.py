@@ -1,0 +1,362 @@
+"""Representation pyramid + streaming cascade-space evaluator (this PR's
+two perf subsystems): progressive downsampling must be exactly the
+from-base transform, the executor's rep-derivation must not change any
+observable output, and the bounded-memory streaming evaluator must agree
+with the dense evaluator (which itself is pinned to the naive per-image
+walker in test_cascade.py)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cascade import (KIND_SINGLE, cascade_time_naive,
+                                evaluate_cascades,
+                                evaluate_cascades_streaming,
+                                simulate_cascade, spec_levels)
+from repro.core.costs import CostProfile, rep_cost_s
+from repro.core.executor import derivation_sources, run_cascade_batch
+from repro.core.pareto import pareto_indices
+from repro.core.thresholds import compute_thresholds_batch
+from repro.core.transforms import (Representation, apply_transform,
+                                   materialize_pyramid,
+                                   materialize_representations,
+                                   plan_pyramid, representation_space,
+                                   resize_area)
+from repro.kernels import ops
+
+
+def _uint8_images(b, hw, seed=0):
+    """Pixel values k/256: exactly-representable dyadics, so nested box
+    filters are bit-exact (the real corpus regime — images come from
+    uint8 sensors)."""
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, 256, (b, hw, hw, 3))
+                       .astype(np.float32) / 256.0)
+
+
+# ---------------------------------------------------------------- pyramid --
+def test_plan_pyramid_uses_nearest_source():
+    steps = plan_pyramid([112, 56, 28], 224)
+    assert [(s.resolution, s.source) for s in steps] == \
+        [(112, 224), (56, 112), (28, 56)]
+    # a hole in the ladder: 8 still nests under 32
+    steps = plan_pyramid([32, 8], 64)
+    assert [(s.resolution, s.source) for s in steps] == [(32, 64), (8, 32)]
+
+
+def test_plan_pyramid_rejects_non_nesting():
+    with pytest.raises(ValueError):
+        plan_pyramid([120], 224)       # 224 % 120 != 0
+
+
+def test_progressive_equals_from_base_exactly():
+    img = _uint8_images(4, 32)
+    pyr = materialize_pyramid(img, [16, 8, 4])
+    for r in (16, 8, 4):
+        direct = np.asarray(resize_area(img, r))
+        assert (np.asarray(pyr[r]) == direct).all(), r
+
+
+def test_progressive_close_on_arbitrary_floats():
+    rng = np.random.default_rng(3)
+    img = jnp.asarray(rng.random((2, 64, 64, 3), np.float32))
+    pyr = materialize_pyramid(img, [32, 16, 8])
+    for r in (32, 16, 8):
+        np.testing.assert_allclose(np.asarray(pyr[r]),
+                                   np.asarray(resize_area(img, r)),
+                                   atol=1e-6)
+
+
+def test_materialize_representations_matches_apply_transform():
+    img = _uint8_images(3, 32, seed=1)
+    reps = representation_space([8, 16, 32])
+    cache = materialize_representations(img, reps)
+    for rep in reps:
+        expect = np.asarray(apply_transform(img, rep))
+        assert (np.asarray(cache[rep]) == expect).all(), rep.name
+
+
+def test_pyramid_kernel_matches_per_rep_reference():
+    img = _uint8_images(3, 32, seed=2)
+    specs = ((16, "rgb"), (16, "gray"), (8, "r"), (4, "gray"),
+             (32, "rgb"))
+    outs = ops.pyramid_transform_op(img, specs=specs)
+    refs = ops.pyramid_transform_op(img, specs=specs, backend="ref")
+    assert len(outs) == len(specs)
+    for o, rf, (res, color) in zip(outs, refs, specs):
+        assert o.shape == (3, res, res, 3 if color == "rgb" else 1)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(rf),
+                                   atol=1e-5)
+
+
+# ----------------------------------------------------- incremental pricing -
+def test_incremental_transform_pricing():
+    reps = [Representation(8, "gray"), Representation(16, "r"),
+            Representation(32, "rgb")]
+    prof = CostProfile.modeled({}, reps, base_hw=32)
+    r8 = reps[0]
+    from_base = rep_cost_s(prof, r8, "CAMERA", False)
+    from_16 = rep_cost_s(prof, r8, "CAMERA", False, source_hw=16)
+    assert from_16 < from_base            # smaller read
+    # non-divisible / missing source falls back to from-base pricing
+    assert rep_cost_s(prof, r8, "CAMERA", False, source_hw=12) == from_base
+    assert rep_cost_s(prof, r8, "CAMERA", False, source_hw=None) == from_base
+    # ONGOING loads pre-materialized reps; the source is irrelevant
+    assert rep_cost_s(prof, r8, "ONGOING", False, source_hw=16) == \
+        rep_cost_s(prof, r8, "ONGOING", False)
+    # hand-built profile without bandwidth fields: no pyramid savings
+    hand = CostProfile(infer_s={}, transform_s={r.name: 1e-3 for r in reps},
+                       load_rep_s={r.name: 1e-4 for r in reps},
+                       load_full_s=1e-2)
+    assert rep_cost_s(hand, r8, "CAMERA", False, source_hw=16) == 1e-3
+
+
+def _grid(seed, n_models=5, n_img=64, n_targets=2):
+    rng = np.random.default_rng(seed)
+    truth = rng.integers(0, 2, n_img)
+    scores = np.clip(truth[None] * rng.uniform(0.3, 0.7, (n_models, 1))
+                     + rng.normal(0.25, 0.2, (n_models, n_img)), 0, 1)
+    p_low, p_high = compute_thresholds_batch(scores, truth,
+                                             [0.9, 0.95][:n_targets])
+    reps = [Representation(8 * (1 + i % 3), ["rgb", "gray", "r"][i % 3])
+            for i in range(n_models)]
+    reps[-1] = Representation(32, "rgb")
+    infer = rng.uniform(1e-4, 5e-3, n_models)
+    infer[-1] = 0.05
+    profile = CostProfile.modeled({}, list(set(reps)), base_hw=32)
+    return scores, truth, p_low, p_high, reps, infer, profile
+
+
+def test_pyramid_pricing_shifts_frontier_down():
+    """Incremental t_transform can only reduce expected cost, and strictly
+    reduces it for some cascade whose later level nests under an earlier
+    one (the paper-§VI frontier shift)."""
+    scores, truth, p_low, p_high, reps, infer, profile = _grid(0)
+    sp_pyr = evaluate_cascades(scores, truth, p_low, p_high, reps, infer,
+                               profile, "CAMERA", trusted=len(reps) - 1)
+    sp_base = evaluate_cascades(scores, truth, p_low, p_high, reps, infer,
+                                profile, "CAMERA", trusted=len(reps) - 1,
+                                pyramid=False)
+    assert np.allclose(sp_pyr.acc, sp_base.acc)
+    assert np.all(sp_pyr.time_s <= sp_base.time_s + 1e-15)
+    assert np.any(sp_pyr.time_s < sp_base.time_s - 1e-12)
+
+
+@pytest.mark.parametrize("scenario",
+                         ["INFER_ONLY", "ARCHIVE", "ONGOING", "CAMERA"])
+def test_pyramid_pricing_matches_naive_walker(scenario):
+    scores, truth, p_low, p_high, reps, infer, profile = _grid(1)
+    sp = evaluate_cascades(scores, truth, p_low, p_high, reps, infer,
+                           profile, scenario, trusted=len(reps) - 1)
+    rng = np.random.default_rng(11)
+    for i in rng.choice(len(sp), size=60, replace=False):
+        levels = spec_levels(sp, int(i), p_low, p_high)
+        acc, _ = simulate_cascade(levels, scores, truth)
+        t = cascade_time_naive(levels, scores, reps, infer, profile,
+                               scenario)
+        assert sp.acc[i] == pytest.approx(acc, abs=1e-5)
+        assert sp.time_s[i] == pytest.approx(t, rel=1e-5)
+
+
+# ----------------------------------------------------------- executor ------
+def test_derivation_sources_match_cost_model_policy():
+    # ascending (cheap->expensive): each level from base or an earlier
+    # nesting level; descending: each from the previous
+    assert derivation_sources([8, 16, 32], 32) == [32, 32, 32]
+    assert derivation_sources([32, 16, 8], 32) == [32, 32, 16]
+    assert derivation_sources([16, 8, 8], 32) == [32, 16, 8]
+    # the paper's 3-level shape: mid level derives from level 1, trusted
+    # from base — exactly what _cost_matrices prices (56 -> 28 nests)
+    assert derivation_sources([56, 28, 224], 224) == [224, 56, 224]
+
+
+def _executor_setup(seed=4):
+    rng = np.random.default_rng(seed)
+    imgs = _uint8_images(48, 32, seed=seed)
+    reps = [Representation(8, "gray"), Representation(16, "r"),
+            Representation(32, "rgb")]
+    ws = [jnp.asarray(rng.standard_normal((8 * 8, 1)).astype(np.float32))
+          * 0.5,
+          jnp.asarray(rng.standard_normal((16 * 16, 1)).astype(np.float32))
+          * 0.5,
+          jnp.asarray(rng.standard_normal((32 * 32 * 3, 1))
+                      .astype(np.float32)) * 0.1]
+
+    def mk(i):
+        def f(x):
+            return jnp.clip(x.reshape(x.shape[0], -1) @ ws[i], 0, 1)[:, 0]
+        return f
+    fns = [mk(0), mk(1), mk(2)]
+    ths = [(0.3, 0.7), (0.35, 0.65), (None, None)]
+    return imgs, reps, fns, ths
+
+
+def test_executor_rep_derivation_identical_to_seed_path():
+    """Pyramid derivation (gather small source rows, derive from the
+    previous level's tensor) must reproduce the seed executor's labels
+    and stats bit-for-bit."""
+    imgs, reps, fns, ths = _executor_setup()
+    legacy = [lambda x, r=r: apply_transform(x, r) for r in reps]
+    l1, s1 = run_cascade_batch(imgs, fns, ths, legacy, capacities=[24, 12])
+    l2, s2 = run_cascade_batch(imgs, fns, ths, reps, capacities=[24, 12])
+    assert (np.asarray(l1) == np.asarray(l2)).all()
+    assert int(s1["overflow"]) == int(s2["overflow"])
+    assert (np.asarray(s1["levels_used"])
+            == np.asarray(s2["levels_used"])).all()
+
+
+def test_executor_rep_derivation_with_overflow():
+    imgs, reps, fns, ths = _executor_setup(seed=5)
+    legacy = [lambda x, r=r: apply_transform(x, r) for r in reps]
+    l1, s1 = run_cascade_batch(imgs, fns, ths, legacy, capacities=[8, 8])
+    l2, s2 = run_cascade_batch(imgs, fns, ths, reps, capacities=[8, 8])
+    assert (np.asarray(l1) == np.asarray(l2)).all()
+    assert int(s1["overflow"]) == int(s2["overflow"])
+
+
+def test_executor_descending_then_trusted_shape():
+    """The paper's 3-level shape (mid level nests under level 1, trusted
+    at base res): derivation must still match the legacy path."""
+    rng = np.random.default_rng(6)
+    imgs = _uint8_images(32, 32, seed=6)
+    reps = [Representation(16, "gray"), Representation(8, "gray"),
+            Representation(32, "rgb")]
+    ws = [jnp.asarray(rng.standard_normal((16 * 16, 1))
+                      .astype(np.float32)) * 0.5,
+          jnp.asarray(rng.standard_normal((8 * 8, 1))
+                      .astype(np.float32)) * 0.5,
+          jnp.asarray(rng.standard_normal((32 * 32 * 3, 1))
+                      .astype(np.float32)) * 0.1]
+
+    def mk(i):
+        def f(x):
+            return jnp.clip(x.reshape(x.shape[0], -1) @ ws[i], 0, 1)[:, 0]
+        return f
+    fns = [mk(0), mk(1), mk(2)]
+    ths = [(0.3, 0.7), (0.35, 0.65), (None, None)]
+    legacy = [lambda x, r=r: apply_transform(x, r) for r in reps]
+    l1, s1 = run_cascade_batch(imgs, fns, ths, legacy, capacities=[16, 8])
+    l2, s2 = run_cascade_batch(imgs, fns, ths, reps, capacities=[16, 8])
+    assert (np.asarray(l1) == np.asarray(l2)).all()
+    assert (np.asarray(s1["levels_used"])
+            == np.asarray(s2["levels_used"])).all()
+
+
+# ----------------------------------------------------- streaming evaluator -
+@pytest.mark.parametrize("scenario",
+                         ["INFER_ONLY", "ARCHIVE", "ONGOING", "CAMERA"])
+def test_streaming_matches_dense(scenario):
+    scores, truth, p_low, p_high, reps, infer, profile = _grid(2)
+    sp = evaluate_cascades(scores, truth, p_low, p_high, reps, infer,
+                           profile, scenario, trusted=len(reps) - 1)
+    st = evaluate_cascades_streaming(scores, truth, p_low, p_high, reps,
+                                     infer, profile, scenario,
+                                     trusted=len(reps) - 1, chunk=3)
+    assert st.evaluated == len(sp)           # full space was scored
+    lookup = {(int(k), int(a), int(b)): j for j, (k, a, b) in
+              enumerate(zip(sp.kind, sp.i1, sp.i2))}
+    for j in range(len(st)):
+        di = lookup[(int(st.kind[j]), int(st.i1[j]), int(st.i2[j]))]
+        assert st.acc[j] == pytest.approx(sp.acc[di], abs=1e-5)
+        assert st.time_s[j] == pytest.approx(sp.time_s[di], rel=2e-5)
+    # the streaming frontier IS the dense frontier (same cascades; dense
+    # may list extra duplicates of equal (acc, time) points)
+    fr = pareto_indices(sp.acc, sp.throughput)
+    stream_ids = {(int(k), int(a), int(b)) for k, a, b in
+                  zip(st.kind, st.i1, st.i2)}
+    front_vals = {(int(sp.kind[i]), int(sp.i1[i]), int(sp.i2[i])):
+                  (sp.acc[i], sp.time_s[i]) for i in fr}
+    for ident, (acc_i, t_i) in front_vals.items():
+        assert ident in stream_ids or any(
+            abs(acc_i - st.acc[j]) < 1e-6
+            and abs(t_i - st.time_s[j]) < 1e-6 * t_i
+            for j in range(len(st))), ident
+
+
+def test_streaming_chunk_size_invariant():
+    scores, truth, p_low, p_high, reps, infer, profile = _grid(6)
+    results = []
+    for chunk in (1, 4, 64):
+        st = evaluate_cascades_streaming(
+            scores, truth, p_low, p_high, reps, infer, profile, "CAMERA",
+            trusted=len(reps) - 1, chunk=chunk)
+        results.append({(int(k), int(a), int(b)) for k, a, b in
+                        zip(st.kind, st.i1, st.i2)})
+    assert results[0] == results[1] == results[2]
+
+
+def test_topk_prefilter_keeps_accuracy_ties():
+    """Equal-accuracy candidates at the k-th boundary must be resolved by
+    the faster-first tie-break, not dropped by the intra-block prefilter
+    (accuracy is correct-count/n so exact ties are common)."""
+    from repro.core.cascade import _StreamReducer
+    red = _StreamReducer(keep="topk", top_k=2)
+    red.push(np.array([0.5, 0.5, 0.5]), np.array([3.0, 2.0, 1.0]),
+             KIND_SINGLE, np.arange(3), np.full(3, -1))
+    sp = red.result(1, 0)
+    np.testing.assert_allclose(sp.time_s, [1.0, 2.0])
+
+
+def test_streaming_topk():
+    scores, truth, p_low, p_high, reps, infer, profile = _grid(7)
+    sp = evaluate_cascades(scores, truth, p_low, p_high, reps, infer,
+                           profile, "CAMERA", trusted=len(reps) - 1)
+    k = 30
+    st = evaluate_cascades_streaming(scores, truth, p_low, p_high, reps,
+                                     infer, profile, "CAMERA",
+                                     trusted=len(reps) - 1, chunk=5,
+                                     keep="topk", top_k=k)
+    assert len(st) == k
+    assert np.all(np.diff(st.acc) <= 1e-12)  # sorted by accuracy desc
+    # the true k-th best accuracy bounds everything kept
+    kth = np.sort(sp.acc)[::-1][k - 1]
+    assert st.acc.min() >= kth - 1e-6
+
+
+def test_streaming_max_level_2_and_first_level_subset():
+    scores, truth, p_low, p_high, reps, infer, profile = _grid(8)
+    sub = [0, 2]
+    sp = evaluate_cascades(scores, truth, p_low, p_high, reps, infer,
+                           profile, "ARCHIVE", trusted=len(reps) - 1,
+                           max_level=2, first_level_models=sub)
+    st = evaluate_cascades_streaming(scores, truth, p_low, p_high, reps,
+                                     infer, profile, "ARCHIVE",
+                                     trusted=len(reps) - 1, max_level=2,
+                                     first_level_models=sub, chunk=2)
+    assert st.evaluated == len(sp)
+    fr = pareto_indices(sp.acc, sp.throughput)
+    stream_ids = {(int(k), int(a), int(b)) for k, a, b in
+                  zip(st.kind, st.i1, st.i2)}
+    for i in fr:
+        ident = (int(sp.kind[i]), int(sp.i1[i]), int(sp.i2[i]))
+        assert ident in stream_ids or any(
+            abs(sp.acc[i] - st.acc[j]) < 1e-6
+            and abs(sp.time_s[i] - st.time_s[j]) < 1e-6 * sp.time_s[i]
+            for j in range(len(st))), ident
+
+
+def test_streaming_pallas_matmul_path():
+    """Force the kernels/matmul.py route (interpret mode on CPU) on a tiny
+    grid — the TPU code path must produce the same survivors."""
+    scores, truth, p_low, p_high, reps, infer, profile = _grid(
+        9, n_models=3, n_img=24, n_targets=1)
+    st_jnp = evaluate_cascades_streaming(
+        scores, truth, p_low, p_high, reps, infer, profile, "CAMERA",
+        trusted=2, chunk=2, use_pallas_matmul=False)
+    st_pl = evaluate_cascades_streaming(
+        scores, truth, p_low, p_high, reps, infer, profile, "CAMERA",
+        trusted=2, chunk=2, use_pallas_matmul=True)
+    assert {(int(k), int(a), int(b)) for k, a, b in
+            zip(st_jnp.kind, st_jnp.i1, st_jnp.i2)} == \
+        {(int(k), int(a), int(b)) for k, a, b in
+         zip(st_pl.kind, st_pl.i1, st_pl.i2)}
+    np.testing.assert_allclose(st_jnp.acc, st_pl.acc, atol=1e-6)
+    np.testing.assert_allclose(st_jnp.time_s, st_pl.time_s, rtol=1e-5)
+
+
+def test_streaming_single_level_only():
+    scores, truth, p_low, p_high, reps, infer, profile = _grid(10)
+    st = evaluate_cascades_streaming(scores, truth, p_low, p_high, reps,
+                                     infer, profile, "CAMERA",
+                                     trusted=len(reps) - 1, max_level=1)
+    assert st.evaluated == len(reps)
+    assert np.all(st.kind == KIND_SINGLE)
