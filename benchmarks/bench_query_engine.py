@@ -1,0 +1,147 @@
+"""Multi-predicate query benchmark: the planned scan engine (shared
+per-chunk pyramid + selectivity x cost predicate ordering + masked
+evaluation + static-shape batching) vs the seed workflow of naive
+per-predicate full scans. Writes ``BENCH_query_engine.json`` at the repo
+root.
+
+  PYTHONPATH=src python -m benchmarks.bench_query_engine [--quick]
+
+Protocol: one TAHOMA system per concept (trained once, small grid), a
+3-predicate + metadata query planned under CAMERA, then both executors
+timed WARM (jit compiled, virtual columns reset) at two corpus sizes.
+Row sets must be bit-identical (make_multi_corpus quantizes to the
+uint8 dyadic regime, so pyramid derivation is exact — DESIGN.md §3.1).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.configs.base import TahomaCNNConfig                    # noqa: E402
+from repro.core.pipeline import initialize_system                 # noqa: E402
+from repro.core.transforms import Representation                  # noqa: E402
+from repro.data.synthetic import (DEFAULT_PREDICATES, make_corpus,  # noqa: E402
+                                  make_multi_corpus, three_way_split)
+from repro.engine import (PredicateClause, QuerySpec, ScanEngine,  # noqa: E402
+                          naive_scan, plan_query)
+
+OUT = Path(__file__).resolve().parents[1] / "BENCH_query_engine.json"
+
+
+def build_systems(specs, *, steps: int, n_train: int, hw: int, log=print):
+    reps = [Representation(8, "gray"), Representation(16, "gray"),
+            Representation(hw, "rgb")]
+    archs = [TahomaCNNConfig(1, 8, 16)]
+    systems = {}
+    t0 = time.time()
+    for spec in specs:
+        x, y = make_corpus(spec, n_train, hw=hw, seed=0)
+        systems[spec.name] = initialize_system(
+            *three_way_split(x, y, seed=1), archs, reps, steps=steps)
+    log(f"[bench] trained {sum(len(s.bank.entries) for s in systems.values())}"
+        f" models in {time.time() - t0:.0f}s")
+    return systems
+
+
+def bench_corpus(systems, specs, n_rows: int, *, chunk: int,
+                 scenario: str, repeats: int = 3, log=print) -> dict:
+    qx, qlabels = make_multi_corpus(specs, n_rows, hw=32, seed=7,
+                                    positive_rate=0.4)
+    metadata = {"cam": np.arange(n_rows) % 2}
+    spec_q = QuerySpec(
+        metadata_eq={"cam": 0},
+        predicates=[PredicateClause(s.name, min_accuracy=0.8)
+                    for s in specs])
+    plan = plan_query(systems, spec_q, scenario=scenario,
+                      metadata=metadata)
+    log(plan.explain(n_rows=n_rows))
+
+    engine = ScanEngine(qx, metadata, chunk=chunk)
+    naive_fns: dict = {}
+
+    def run_engine():
+        engine.reset_cache()      # fresh virtual columns: full query work
+        return engine.execute(plan.cascades, plan.metadata_eq)
+
+    def run_naive():
+        return naive_scan(qx, plan.cascades, metadata, plan.metadata_eq,
+                          chunk=chunk, _fn_cache=naive_fns)
+
+    res = run_engine()            # warm: jit compile both paths
+    ref = run_naive()
+    identical = bool(np.array_equal(res.indices, ref))
+
+    t_eng = min(_time(run_engine) for _ in range(repeats))
+    t_nai = min(_time(run_naive) for _ in range(repeats))
+    rows_eval = res.stats.rows_evaluated
+    naive_rows = n_rows * len(specs)
+    out = {
+        "rows": n_rows,
+        "chunk": chunk,
+        "predicates": len(specs),
+        "matches": int(len(res.indices)),
+        "identical_row_sets": identical,
+        "engine_s": round(t_eng, 4),
+        "naive_s": round(t_nai, 4),
+        "speedup_x": round(t_nai / t_eng, 2),
+        "rows_evaluated_engine": int(rows_eval),
+        "rows_evaluated_naive": int(naive_rows),
+        "row_eval_ratio_x": round(naive_rows / max(rows_eval, 1), 2),
+        "stages": [{
+            "concept": s.concept, "rows_in": s.rows_in,
+            "rows_evaluated": s.rows_evaluated, "batches": s.batches}
+            for s in res.stats.stages],
+    }
+    log(f"  rows={n_rows}: engine {t_eng:.3f}s vs naive {t_nai:.3f}s "
+        f"-> {out['speedup_x']}x (row-evals {out['row_eval_ratio_x']}x "
+        f"fewer, identical={identical})")
+    return out
+
+
+def _time(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller corpora/training (CI smoke)")
+    args = ap.parse_args()
+
+    import jax
+    specs = DEFAULT_PREDICATES[:3]
+    steps = 30 if args.quick else 60
+    sizes = (256, 512) if args.quick else (768, 2304)
+    chunk = 64 if args.quick else 128
+
+    systems = build_systems(specs, steps=steps,
+                            n_train=160 if args.quick else 240, hw=32)
+    report = {
+        "backend": jax.default_backend(),
+        "scenario": "CAMERA",
+        "query": "SELECT frames WHERE cam=0 AND "
+                 + " AND ".join(f"contains({s.name})" for s in specs),
+        "corpora": [bench_corpus(systems, specs, n, chunk=chunk,
+                                 scenario="CAMERA") for n in sizes],
+    }
+    report["speedup_min_x"] = min(c["speedup_x"]
+                                  for c in report["corpora"])
+    report["all_identical"] = all(c["identical_row_sets"]
+                                  for c in report["corpora"])
+    # --quick is a CI smoke: compile-dominated, never clobber the artifact
+    out = OUT.with_suffix(".quick.json") if args.quick else OUT
+    out.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -34,19 +34,27 @@ def main():
     ap.add_argument("--scenario", default="CAMERA",
                     choices=["INFER_ONLY", "ARCHIVE", "ONGOING", "CAMERA"])
     ap.add_argument("--min-accuracy", type=float, default=0.85)
+    ap.add_argument("--tiny", action="store_true",
+                    help="smoke-test scale (CI): fewer models/images/steps")
     args = ap.parse_args()
 
     pred = DEFAULT_PREDICATES[1]
     print(f"== predicate: contains_object({pred.name}) ==")
-    x, y = make_corpus(pred, 480, hw=32, seed=0)
+    n_img = 240 if args.tiny else 480
+    x, y = make_corpus(pred, n_img, hw=32, seed=0)
     splits = three_way_split(x, y, seed=1)
 
     print("initializing system (training model grid)...")
     t0 = time.time()
-    sys_ = initialize_system(
-        *splits,
-        archs=[TahomaCNNConfig(1, 8, 16), TahomaCNNConfig(2, 16, 16)],
-        reps=representation_space([8, 16, 32]), steps=150)
+    if args.tiny:
+        archs = [TahomaCNNConfig(1, 8, 16)]
+        reps = representation_space([8, 16, 32], ("rgb", "gray"))
+        steps = 40
+    else:
+        archs = [TahomaCNNConfig(1, 8, 16), TahomaCNNConfig(2, 16, 16)]
+        reps = representation_space([8, 16, 32])
+        steps = 150
+    sys_ = initialize_system(*splits, archs=archs, reps=reps, steps=steps)
     print(f"  {len(sys_.bank.entries)} models in {time.time()-t0:.0f}s")
 
     space = sys_.cascade_space(args.scenario)

@@ -1,8 +1,10 @@
-"""Serving example: a request stream of images flows through the batcher
-into the TPU-native batched cascade executor (two-phase compaction), with
-per-request latency accounting — the online half of the paper's system.
+"""Serving example: a MIXED request stream ("does this frame contain
+a?" / "...contain b?") flows through CascadeService, which routes each
+predicate's requests into its own fixed-shape batch over a jitted
+cascade executor (engine/scan.make_batch_runner) — the online face of
+the query engine, with per-request latency accounting.
 
-  PYTHONPATH=src python examples/serve_cascade.py [--requests 512]
+  PYTHONPATH=src python examples/serve_cascade.py [--requests 256]
 """
 import argparse
 import sys
@@ -11,82 +13,96 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.configs.base import TahomaCNNConfig  # noqa: E402
-from repro.core.executor import calibrate_capacity, run_cascade_batch  # noqa: E402
+from repro.core.executor import calibrate_capacity  # noqa: E402
+from repro.core.pipeline import train_cnn  # noqa: E402
 from repro.core.transforms import Representation, apply_transform  # noqa: E402
 from repro.data.synthetic import DEFAULT_PREDICATES, make_corpus  # noqa: E402
-from repro.core.pipeline import train_cnn  # noqa: E402
+from repro.engine.scan import CompiledCascade, make_batch_runner  # noqa: E402
 from repro.models.cnn import cnn_predict_proba  # noqa: E402
-from repro.serve.batcher import Batcher, Request  # noqa: E402
+from repro.serve.batcher import CascadeService, Request  # noqa: E402
+
+
+def build_cascade(spec, batch_size: int, *, hw: int = 32, steps: int = 150,
+                  n_train: int = 300):
+    """Train a 2-level cascade (small gray@16 -> full rgb@hw) for one
+    predicate and package it as a CompiledCascade."""
+    x, y = make_corpus(spec, n_train + 130, hw=hw, seed=0)
+    tr_x, tr_y = x[:n_train], y[:n_train]
+    rep_fast = Representation(16, "gray")
+    rep_full = Representation(hw, "rgb")
+    fast_arch = TahomaCNNConfig(1, 8, 16, input_hw=16, input_channels=1)
+    full_arch = TahomaCNNConfig(2, 16, 32, input_hw=hw, input_channels=3)
+    p_fast = train_cnn(fast_arch, np.asarray(
+        apply_transform(jnp.asarray(tr_x), rep_fast)), tr_y, steps=steps)
+    p_full = train_cnn(full_arch, np.asarray(
+        apply_transform(jnp.asarray(tr_x), rep_full)), tr_y,
+        steps=steps + 50)
+    # calibrate level-2 capacity from the observed uncertain fraction
+    s = np.asarray(cnn_predict_proba(p_fast, apply_transform(
+        jnp.asarray(x[n_train:]), rep_fast)))
+    unc = float(((s > 0.2) & (s < 0.8)).mean())
+    cap = calibrate_capacity(unc, batch_size)
+    print(f"  {spec.name}: uncertain fraction {unc:.2f} -> "
+          f"level-2 capacity {cap}")
+    return CompiledCascade(
+        concept=spec.name, cascade_id=("serve-2level", spec.name),
+        reps=[rep_fast, rep_full],
+        model_fns=[lambda z, p=p_fast: cnn_predict_proba(p, z),
+                   lambda z, p=p_full: cnn_predict_proba(p, z)],
+        thresholds=[(0.2, 0.8), (None, None)], capacities=[cap])
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=256)
     ap.add_argument("--batch-size", type=int, default=64)
+    ap.add_argument("--tiny", action="store_true",
+                    help="smoke-test scale (CI)")
     args = ap.parse_args()
+    if args.tiny:
+        args.requests = min(args.requests, 48)
+        args.batch_size = min(args.batch_size, 16)
+    steps = 40 if args.tiny else 150
 
-    pred = DEFAULT_PREDICATES[1]
-    x, y = make_corpus(pred, 600, hw=32, seed=0)
-    tr_x, tr_y = x[:300], y[:300]
+    specs = (DEFAULT_PREDICATES[1], DEFAULT_PREDICATES[4])
+    print("training one 2-level cascade per predicate...")
+    cascades = {s.name: build_cascade(s, args.batch_size, steps=steps)
+                for s in specs}
+    service = CascadeService(
+        {c: make_batch_runner(casc, args.batch_size)
+         for c, casc in cascades.items()},
+        batch_size=args.batch_size, max_wait_s=0.005)
 
-    print("training a 2-level cascade (small gray@16px -> full rgb@32px)...")
-    rep_fast = Representation(16, "gray")
-    rep_full = Representation(32, "rgb")
-    fast_arch = TahomaCNNConfig(1, 8, 16, input_hw=16, input_channels=1)
-    full_arch = TahomaCNNConfig(2, 16, 32, input_hw=32, input_channels=3)
-    p_fast = train_cnn(fast_arch, np.asarray(
-        apply_transform(jnp.asarray(tr_x), rep_fast)), tr_y, steps=150)
-    p_full = train_cnn(full_arch, np.asarray(
-        apply_transform(jnp.asarray(tr_x), rep_full)), tr_y, steps=200)
-
-    # calibrate level-2 capacity from the observed uncertain fraction
-    s = np.asarray(cnn_predict_proba(p_fast, apply_transform(
-        jnp.asarray(x[300:430]), rep_fast)))
-    unc = float(((s > 0.2) & (s < 0.8)).mean())
-    cap = calibrate_capacity(unc, args.batch_size)
-    print(f"level-1 uncertain fraction {unc:.2f} -> level-2 capacity {cap}")
-
-    # passing Representations (not callables) turns on pyramid source
-    # derivation: level inputs come from the previous level's source
-    # tensor instead of re-transforming raw images (DESIGN.md §3.4)
-    cascade = jax.jit(lambda imgs: run_cascade_batch(
-        imgs,
-        [lambda z: cnn_predict_proba(p_fast, z),
-         lambda z: cnn_predict_proba(p_full, z)],
-        [(0.2, 0.8), (None, None)],
-        [rep_fast, rep_full],
-        capacities=[cap]))
-
-    def run_batch(payloads):
-        labels, stats = cascade(jnp.stack(payloads))
-        return list(np.asarray(labels))
-
-    batcher = Batcher(run_batch, batch_size=args.batch_size,
-                      max_wait_s=0.005)
-    stream = x[300:300 + args.requests]
-    truth = y[300:300 + args.requests]
+    # mixed stream: each request asks about ONE predicate's concept
+    streams = {s.name: make_corpus(s, 300 + args.requests, hw=32, seed=9)
+               for s in specs}
     t0 = time.perf_counter()
     results = []
-    for i, img in enumerate(stream):
+    for i in range(args.requests):
+        spec = specs[i % len(specs)]
+        x, y = streams[spec.name]
+        img = x[300 + i]
         r = Request(i, jnp.asarray(img))
-        batcher.submit(r)
-        results.append(r)
-        batcher.poll()
-    batcher.drain()
+        service.submit(spec.name, r)
+        results.append((spec.name, r, int(y[300 + i])))
+        service.poll()
+    service.drain()
     dt = time.perf_counter() - t0
-    preds = np.array([r.result for r in results])
-    lat = np.array(batcher.stats.latencies) * 1e3
-    print(f"\nserved {len(stream)} requests in {dt:.2f}s "
-          f"({len(stream)/dt:.0f} img/s)")
-    print(f"batches={batcher.stats.batches} padded={batcher.stats.padded_slots}")
+
+    lat = np.array(service.latencies()) * 1e3
+    print(f"\nserved {args.requests} mixed requests in {dt:.2f}s "
+          f"({args.requests / dt:.0f} img/s)")
+    for c, st in service.stats.items():
+        acc = np.mean([int(r.result) == y for cc, r, y in results
+                       if cc == c])
+        print(f"  {c}: batches={st.batches} padded={st.padded_slots} "
+              f"accuracy={acc:.3f}")
     print(f"latency p50={np.percentile(lat, 50):.1f}ms "
           f"p99={np.percentile(lat, 99):.1f}ms")
-    print(f"accuracy vs ground truth: {(preds == truth).mean():.3f}")
 
 
 if __name__ == "__main__":

@@ -3,7 +3,7 @@ top-6, expert d_ff=1536. [arXiv:2405.04434; hf]
 
 MLA's latent KV cache (c_kv=512 + k_rope=64 per token instead of
 2*128heads*128dim) is itself a *physical-representation* optimization of
-the cache — the paper's core idea applied inside the model (DESIGN.md §4).
+the cache — the paper's core idea applied inside the model (DESIGN.md §5).
 """
 from repro.configs.base import ArchConfig, MLAConfig, MoEConfig
 

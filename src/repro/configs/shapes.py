@@ -26,7 +26,7 @@ SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
 
 def shape_applicable(arch, shape: ShapeConfig) -> tuple[bool, str]:
     """long_500k needs sub-quadratic sequence mixing (SSM/hybrid); pure
-    full-attention archs skip it (recorded, per DESIGN.md §4)."""
+    full-attention archs skip it (recorded, per DESIGN.md §5)."""
     if shape.name == "long_500k" and not arch.subquadratic:
         return False, "SKIPPED: pure full-attention arch; long_500k needs sub-quadratic attention"
     return True, ""

@@ -52,46 +52,84 @@ def derivation_sources(res_seq: list[int], base: int) -> list[int]:
     return out
 
 
+def run_cascade_on_pyramid(pyramid, model_fns: Sequence[Callable],
+                           thresholds, reps: Sequence[Representation],
+                           capacities: Sequence[int]):
+    """Run a cascade whose level inputs all derive from a CALLER-PROVIDED
+    RGB pyramid cache ``{resolution: (B, r, r, 3) tensor}`` — the entry
+    point the scan engine (engine/scan.py) uses so ONE materialized
+    pyramid per corpus chunk serves every selected cascade. Missing
+    levels are pooled on the fly from the nearest (smallest) cached level
+    whose resolution they divide, exactly the derivation_sources policy,
+    and cached back into a local copy (the caller's dict is not mutated).
+    Returns (labels (B,), stats) like run_cascade_batch."""
+    pyr_cache = dict(pyramid)
+    base = max(pyr_cache)
+    res_seq = [r.resolution for r in reps]
+
+    def _pyramid_level(res: int):
+        if res not in pyr_cache:
+            usable = [m for m in pyr_cache if m % res == 0]
+            src = min(usable) if usable else base
+            pyr_cache[res] = resize_area(pyr_cache[src], res)
+        return pyr_cache[res]
+
+    def get_input(l: int, take):
+        level = _pyramid_level(res_seq[l])
+        # gather the (small) already-derived rows, not raw images
+        sub = level if take is None else jnp.take(level, take, axis=0)
+        return color_transform(sub, reps[l].color)
+
+    b = next(iter(pyr_cache.values())).shape[0]
+    return _cascade_loop(b, get_input, model_fns, thresholds, capacities)
+
+
 def run_cascade_batch(images, model_fns: Sequence[Callable],
                       thresholds: Sequence[tuple[float | None,
                                                  float | None]],
-                      transforms, capacities: Sequence[int]):
+                      transforms, capacities: Sequence[int],
+                      pyramid_cache=None):
     """images: raw batch (B, H, W, 3). Returns (labels (B,), stats).
     thresholds[l] = (p_low, p_high); final level may be (None, None).
     transforms: per-level transform callables, or per-level
     ``Representation``s (enables pyramid source derivation — see module
-    docstring). capacities[l]: static sub-batch size for level l >= 1."""
+    docstring). capacities[l]: static sub-batch size for level l >= 1.
+    pyramid_cache: optional pre-materialized {resolution: tensor} levels
+    (merged with the raw base) for the Representation path — lets callers
+    share one pyramid across several cascades."""
     pyramid = (len(transforms) > 0
                and isinstance(transforms[0], Representation))
-    b = images.shape[0]
-    labels = jnp.zeros((b,), jnp.int32)
-    decided = jnp.zeros((b,), bool)
-    overflow = jnp.zeros((), jnp.int32)
-    levels_used = jnp.zeros((len(model_fns),), jnp.int32)
-
     if pyramid:
-        reps: list[Representation] = list(transforms)
-        res_seq = [r.resolution for r in reps]
         # full-batch RGB pyramid cache: each level's resolution is pooled
         # from the nearest (smallest) materialized level, then cached for
         # later levels — total extra memory is a geometric tail of the
         # base batch, and bytes read per level match the cost model's
         # derivation_sources policy
-        pyr_cache = {images.shape[1]: images}
+        pyr = {images.shape[1]: images}
+        if pyramid_cache:
+            pyr.update(pyramid_cache)
+        return run_cascade_on_pyramid(pyr, model_fns, thresholds,
+                                      list(transforms), capacities)
 
-        def _pyramid_level(res: int):
-            if res not in pyr_cache:
-                usable = [m for m in pyr_cache if m % res == 0]
-                src = min(usable) if usable else images.shape[1]
-                pyr_cache[res] = resize_area(pyr_cache[src], res)
-            return pyr_cache[res]
+    def get_input(l: int, take):
+        sub = images if take is None else jnp.take(images, take, axis=0)
+        return transforms[l](sub)
 
-        rep0 = color_transform(_pyramid_level(res_seq[0]), reps[0].color)
-    else:
-        rep0 = transforms[0](images)
+    return _cascade_loop(images.shape[0], get_input, model_fns,
+                         thresholds, capacities)
+
+
+def _cascade_loop(b: int, get_input, model_fns, thresholds, capacities):
+    """Two-phase compaction loop shared by both input paths.
+    get_input(l, take): level-l input representation for the full batch
+    (take=None) or the gathered rows ``take``."""
+    labels = jnp.zeros((b,), jnp.int32)
+    decided = jnp.zeros((b,), bool)
+    overflow = jnp.zeros((), jnp.int32)
+    levels_used = jnp.zeros((len(model_fns),), jnp.int32)
 
     # level 0 on the full batch
-    o = model_fns[0](rep0)
+    o = model_fns[0](get_input(0, None))
     lo, hi = thresholds[0]
     if lo is None:
         return (o >= 0.5).astype(jnp.int32), {
@@ -111,14 +149,7 @@ def run_cascade_batch(images, model_fns: Sequence[Callable],
         take = order[:cap]
         valid = active_mask[take]
         overflow = overflow + jnp.sum(active_mask) - jnp.sum(valid)
-        if pyramid:
-            # gather the (small) already-derived rows, not raw images
-            sub = jnp.take(_pyramid_level(res_seq[l]), take, axis=0)
-            repl = color_transform(sub, reps[l].color)
-        else:
-            sub = jnp.take(images, take, axis=0)
-            repl = transforms[l](sub)
-        o = model_fns[l](repl)
+        o = model_fns[l](get_input(l, take))
         levels_used = levels_used.at[l].set(jnp.sum(valid.astype(jnp.int32)))
         lo, hi = thresholds[l]
         final = lo is None

@@ -1,5 +1,5 @@
 """The paper's technique as a first-class feature for the assigned LM
-architectures (DESIGN.md §4): a *predicate cascade over language models*.
+architectures (DESIGN.md §5): a *predicate cascade over language models*.
 
 A contains-concept predicate over text/media is scored by asking a model
 to choose between a YES token and a NO token; P(yes) is the probabilistic

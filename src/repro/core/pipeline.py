@@ -160,6 +160,7 @@ class TahomaSystem:
     eval_scores: np.ndarray
     eval_truth: np.ndarray
     targets: tuple
+    space_cache: dict = field(default_factory=dict)
 
     def cascade_space(self, scenario: str, *, max_level: int = 3,
                       reps_subset=None, streaming: bool = False,
@@ -168,7 +169,13 @@ class TahomaSystem:
         (cheap: pure linear algebra over cached scores — §V-E).
         streaming=True runs the bounded-memory chunked evaluator and
         returns only the surviving (Pareto/top-K) cascades; extra kwargs
-        (chunk, keep, top_k, ...) pass through."""
+        (chunk, keep, top_k, ...) pass through. Plain evaluations (no
+        subset/kwargs) are memoized per (scenario, max_level, streaming)
+        so repeated query planning reuses the evaluated space."""
+        plain = reps_subset is None and not stream_kw
+        key = (scenario, max_level, streaming)
+        if plain and key in self.space_cache:
+            return self.space_cache[key]
         keep = None
         if reps_subset is not None:
             keep = [i for i, e in enumerate(self.bank.entries)
@@ -176,11 +183,46 @@ class TahomaSystem:
         infer = np.array([self.infer_s[n] for n in self.bank.names])
         evaluate = (evaluate_cascades_streaming if streaming
                     else evaluate_cascades)
-        return evaluate(
+        space = evaluate(
             self.eval_scores, self.eval_truth, self.p_low, self.p_high,
             self.bank.reps, infer, self.profile, scenario,
             self.bank.trusted_index, max_level=max_level,
             first_level_models=keep, **stream_kw)
+        if plain:
+            self.space_cache[key] = space
+        return space
+
+    def compiled_cascade(self, space: CascadeSpace, index: int, *,
+                         concept: str = "pred", capacities=None):
+        """Bridge to the query engine (DESIGN.md §4): decode cascade
+        ``index`` of an evaluated space into an executable
+        engine.scan.CompiledCascade — per-level model closures over this
+        bank's trained params, thresholds, representations, plus the
+        planner's cost (expected s/row under the space's scenario) and
+        selectivity (simulated over the cached eval scores) estimates."""
+        from functools import partial
+
+        from repro.core.cascade import spec_levels
+        from repro.core.selector import estimate_selectivity
+        from repro.engine.scan import CompiledCascade
+
+        levels = spec_levels(space, index, self.p_low, self.p_high)
+        reps, fns, ths = [], [], []
+        for m, lo, hi in levels:
+            e = self.bank.entries[m]
+            reps.append(e.rep)
+            fns.append(partial(cnn_predict_proba, e.params))
+            ths.append((None if lo is None else float(lo),
+                        None if hi is None else float(hi)))
+        sel = estimate_selectivity(space, index, self.eval_scores,
+                                   self.p_low, self.p_high)
+        cascade_id = (int(space.kind[index]), int(space.i1[index]),
+                      int(space.i2[index]))
+        return CompiledCascade(
+            concept=concept, cascade_id=cascade_id, reps=reps,
+            model_fns=fns, thresholds=ths,
+            cost_s=float(space.time_s[index]), selectivity=sel,
+            capacities=capacities)
 
 
 def initialize_system(train_split, config_split, eval_split,

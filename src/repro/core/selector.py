@@ -9,7 +9,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.cascade import CascadeSpace
+from repro.core.cascade import CascadeSpace, spec_levels
 from repro.core.pareto import pareto_indices
 
 
@@ -44,3 +44,35 @@ def select(space: CascadeSpace, *, min_accuracy: float | None = None,
         else cand[np.argmax(acc[cand])]
     i = int(idx[j])
     return Selection(i, float(space.acc[i]), float(space.throughput[i]))
+
+
+# --------------------------------------------- planner-facing estimates ----
+def cascade_eval_labels(space: CascadeSpace, i: int, scores_eval,
+                        p_low, p_high) -> np.ndarray:
+    """Labels cascade ``i`` would emit on the eval split, simulated from
+    the cached score matrix (paper §V-D: no inference needed). Vectorized
+    per-level walk with the exact Def. 7 semantics."""
+    levels = spec_levels(space, i, p_low, p_high)
+    s = np.asarray(scores_eval)
+    n = s.shape[1]
+    labels = np.zeros(n, np.int32)
+    active = np.ones(n, bool)
+    for m, lo, hi in levels:
+        o = s[m]
+        if lo is None:
+            labels[active] = (o >= 0.5)[active]
+            active[:] = False
+            break
+        dec = active & ((o <= lo) | (o >= hi))
+        labels[dec] = (o >= hi)[dec]
+        active &= ~dec
+    return labels
+
+
+def estimate_selectivity(space: CascadeSpace, i: int, scores_eval,
+                         p_low, p_high) -> float:
+    """Estimated P(predicate true) = positive fraction the cascade labels
+    on the eval split — the statistic the query planner orders binary
+    predicates by (selectivity x per-row cost)."""
+    return float(cascade_eval_labels(space, i, scores_eval,
+                                     p_low, p_high).mean())

@@ -1,5 +1,5 @@
 """Host data pipeline: sharding-aware batching + background prefetch
-(compute/IO overlap — DESIGN.md §5)."""
+(compute/IO overlap — DESIGN.md §6)."""
 from __future__ import annotations
 
 import queue

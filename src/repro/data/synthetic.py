@@ -79,6 +79,34 @@ def make_corpus(spec: PredicateSpec, n: int, hw: int = 64, seed: int = 0,
     return x, labels
 
 
+def make_multi_corpus(specs, n: int, hw: int = 32, seed: int = 0,
+                      positive_rate: float = 0.5, quantize: bool = True):
+    """One corpus carrying SEVERAL independent predicate signals — the
+    multi-predicate query workload (engine/): each spec's texture is
+    injected into its own random row subset. Returns (images (N,hw,hw,3),
+    labels (N, K) int32). quantize rounds pixels to k/256 dyadics (the
+    uint8-sensor regime), keeping pyramid derivation bit-exact
+    (DESIGN.md §3.1) so engine and naive scans select identical rows."""
+    rng = np.random.default_rng(seed)
+    x = _clutter(rng, n, hw)
+    labels = np.zeros((n, len(specs)), np.int32)
+    yy, xx = np.meshgrid(np.arange(hw), np.arange(hw), indexing="ij")
+    for k, spec in enumerate(specs):
+        pos = rng.random(n) < positive_rate
+        labels[:, k] = pos
+        phase = rng.uniform(0, 2 * np.pi, size=n)
+        theta = rng.uniform(0, np.pi, size=n)
+        for i in np.where(pos)[0]:
+            g = (np.cos(theta[i]) * xx + np.sin(theta[i]) * yy) / hw
+            tex = np.sin(2 * np.pi * spec.freq * g + phase[i])
+            x[i, :, :, spec.channel] += spec.amplitude * tex
+    x = 0.5 + 0.18 * x
+    x = np.clip(x, 0.0, 1.0).astype(np.float32)
+    if quantize:
+        x = (np.floor(x * 256.0).clip(0, 255) / 256.0).astype(np.float32)
+    return x, labels
+
+
 def three_way_split(x, y, seed: int = 0, frac=(0.5, 0.25, 0.25)):
     """train / config(thresholds) / eval — paper §V-A's three splits."""
     rng = np.random.default_rng(seed)

@@ -1,0 +1,17 @@
+"""Query engine (DESIGN.md §4): logical→physical planner + unified
+multi-predicate scan executor over physically-optimized cascades."""
+from repro.engine.planner import (PhysicalPlan, PlannedPredicate,
+                                  PredicateClause, QuerySpec,
+                                  expected_scan_cost, order_predicates,
+                                  plan_query, predicate_rank)
+from repro.engine.scan import (CompiledCascade, ScanEngine, ScanResult,
+                               ScanStats, VirtualColumnStore,
+                               make_batch_runner, naive_scan)
+
+__all__ = [
+    "CompiledCascade", "PhysicalPlan", "PlannedPredicate",
+    "PredicateClause", "QuerySpec", "ScanEngine", "ScanResult",
+    "ScanStats", "VirtualColumnStore", "expected_scan_cost",
+    "make_batch_runner", "naive_scan", "order_predicates", "plan_query",
+    "predicate_rank",
+]

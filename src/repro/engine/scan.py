@@ -1,0 +1,356 @@
+"""Unified multi-predicate scan engine (DESIGN.md §4.2).
+
+Executes a PhysicalPlan (engine/planner.py) over an image corpus:
+
+* the corpus is streamed in fixed-size chunks of the rows that survive
+  the metadata predicates; each chunk materializes ONE shared RGB
+  representation pyramid (core/transforms.materialize_pyramid) covering
+  the union of every selected cascade's levels — no cascade re-reads the
+  raw base images;
+* binary predicates run as a pipeline of mask-compacted stages: rows
+  surviving predicate k-1 accumulate in predicate k's fixed-capacity row
+  buffer (carrying their already-pooled pyramid rows, not raw images);
+  a full buffer flushes through the cascade at ONE static batch shape
+  (core/executor.run_cascade_on_pyramid — jit-compiled once per
+  cascade). Rows eliminated earlier are never evaluated;
+* every computed label lands in a VirtualColumnStore keyed by
+  (concept, cascade-id) — the paper's 'classifier output as a virtual
+  column', kept PARTIAL: re-planned queries (different order, different
+  constraints, overlapping predicate sets) reuse every row previously
+  decided by the same physical cascade and only evaluate the rest.
+
+Because every per-row computation (box-filter pooling, per-sample CNN
+inference) is independent of the surrounding batch at a fixed shape, the
+selected row set is bit-identical to ``naive_scan``'s one-predicate-at-
+a-time full scans (tests/test_query_engine.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Mapping, Sequence
+
+import numpy as np
+
+from repro.core.executor import run_cascade_batch, run_cascade_on_pyramid
+from repro.core.transforms import materialize_pyramid
+
+
+@dataclass
+class CompiledCascade:
+    """A physically-selected cascade, ready to execute: the planner's
+    output unit and the scan engine's unit of work. ``cascade_id`` must
+    identify the physical cascade (models + thresholds) stably so the
+    virtual-column store can recognize it across plans."""
+    concept: str
+    cascade_id: tuple
+    reps: list                       # list[Representation], one per level
+    model_fns: list                  # level input tensor -> scores (B,)
+    thresholds: list                 # [(p_low, p_high)...]; final (None, None)
+    cost_s: float = 0.0              # estimated seconds/row (planner)
+    selectivity: float = 0.5         # estimated P(predicate true)
+    # capacities is a SERVING-path knob (make_batch_runner): capped
+    # levels force overflow rows to level-0 decisions, which depend on
+    # batch packing. Scan paths (ScanEngine / naive_scan) deliberately
+    # ignore it and run full-width levels so scan results are exact,
+    # batch-packing independent, and safe to cache as virtual columns.
+    capacities: list | None = None
+
+    @property
+    def key(self) -> tuple:
+        return (self.concept, tuple(self.cascade_id))
+
+    @property
+    def resolutions(self) -> list[int]:
+        return sorted({r.resolution for r in self.reps}, reverse=True)
+
+
+class VirtualColumnStore:
+    """Partial virtual columns keyed by (concept, cascade-id): int8 labels
+    with -1 = not yet evaluated. Shared across executions of one engine so
+    re-planned queries reuse prior work."""
+
+    def __init__(self, n_rows: int):
+        self.n_rows = n_rows
+        self._cols: dict[tuple, np.ndarray] = {}
+
+    def column(self, key: tuple) -> np.ndarray:
+        if key not in self._cols:
+            self._cols[key] = np.full(self.n_rows, -1, np.int8)
+        return self._cols[key]
+
+    def lookup(self, key: tuple, ids: np.ndarray) -> np.ndarray:
+        return self.column(key)[ids]
+
+    def record(self, key: tuple, ids: np.ndarray, labels) -> None:
+        self.column(key)[ids] = np.asarray(labels, np.int8)
+
+    def known_rows(self, key: tuple) -> int:
+        return int((self.column(key) >= 0).sum())
+
+
+@dataclass
+class StageStats:
+    concept: str
+    rows_in: int = 0          # rows routed to this predicate
+    rows_cached: int = 0      # resolved from the virtual-column store
+    rows_evaluated: int = 0   # rows actually run through the cascade
+    batches: int = 0          # cascade invocations (static-shape flushes)
+
+
+@dataclass
+class ScanStats:
+    chunks: int = 0           # ingest chunks == shared pyramids built
+    rows_scanned: int = 0     # rows surviving metadata (pyramid rows)
+    stages: list = field(default_factory=list)
+
+    @property
+    def rows_evaluated(self) -> int:
+        return sum(s.rows_evaluated for s in self.stages)
+
+
+@dataclass
+class ScanResult:
+    indices: np.ndarray       # sorted matching row ids
+    stats: ScanStats
+
+
+class _StageBuffer:
+    """Fixed-capacity row accumulator for one predicate stage: ids plus
+    the pooled pyramid rows every stage >= this one still needs."""
+
+    def __init__(self, cap: int, resolutions: Sequence[int]):
+        self.cap = cap
+        self.ids = np.zeros(cap, np.int64)
+        self.rows = {r: np.zeros((cap, r, r, 3), np.float32)
+                     for r in resolutions}
+        self.fill = 0
+
+
+class ScanEngine:
+    """Streaming multi-predicate scan over one corpus. Holds the
+    virtual-column store and the per-cascade jit caches, so repeated /
+    re-planned queries amortize both compilation and inference."""
+
+    def __init__(self, images, metadata: Mapping[str, np.ndarray]
+                 | None = None, *, chunk: int = 64, jit: bool = True):
+        self.images = np.asarray(images, np.float32)
+        self.metadata = dict(metadata or {})
+        self.chunk = int(chunk)
+        self.jit = jit
+        self.store = VirtualColumnStore(len(self.images))
+        self._pyr_fns: dict = {}
+        self._casc_fns: dict = {}
+
+    def reset_cache(self) -> None:
+        """Drop the virtual-column store (keeps compiled cascades)."""
+        self.store = VirtualColumnStore(len(self.images))
+
+    # ------------------------------------------------------- jit caches --
+    def _pyramid_fn(self, resolutions: tuple) -> Callable:
+        if resolutions not in self._pyr_fns:
+            import jax
+
+            def mat(img):
+                levels = materialize_pyramid(img, resolutions)
+                return {r: levels[r] for r in resolutions}
+            self._pyr_fns[resolutions] = jax.jit(mat) if self.jit else mat
+        return self._pyr_fns[resolutions]
+
+    def _cascade_fn(self, casc: CompiledCascade) -> Callable:
+        key = casc.key
+        if key not in self._casc_fns:
+            import jax
+            # full-width levels, never casc.capacities: see CompiledCascade
+            caps = [self.chunk] * (len(casc.model_fns) - 1)
+
+            def run(pyr):
+                return run_cascade_on_pyramid(
+                    pyr, casc.model_fns, casc.thresholds, casc.reps,
+                    caps)[0]
+            self._casc_fns[key] = jax.jit(run) if self.jit else run
+        return self._casc_fns[key]
+
+    # --------------------------------------------------------- execution --
+    def metadata_mask(self, metadata_eq: Mapping | None) -> np.ndarray:
+        mask = np.ones(len(self.images), bool)
+        for col, val in (metadata_eq or {}).items():
+            mask &= np.asarray(self.metadata[col]) == val
+        return mask
+
+    def execute(self, cascades: Sequence[CompiledCascade],
+                metadata_eq: Mapping | None = None) -> ScanResult:
+        """SELECT row ids WHERE metadata_eq AND every cascade labels 1,
+        evaluating cascades in the given (planner's) order."""
+        import jax.numpy as jnp
+
+        cascades = list(cascades)
+        k = len(cascades)
+        stats = ScanStats(stages=[StageStats(c.concept) for c in cascades])
+        mask = self.metadata_mask(metadata_eq)
+        if k == 0:
+            return ScanResult(np.where(mask)[0], stats)
+
+        base_hw = self.images.shape[1]
+        # needed[s]: pyramid resolutions stages >= s still require
+        needed: list[list[int]] = []
+        acc: set[int] = set()
+        for c in reversed(cascades):
+            acc |= {r.resolution for r in c.reps}
+            needed.append(sorted(acc, reverse=True))
+        needed = needed[::-1]
+        union_res = tuple(sorted(set(needed[0]) | {base_hw}, reverse=True))
+
+        pyr_fn = self._pyramid_fn(union_res)
+        runners = [self._cascade_fn(c) for c in cascades]
+        buffers = [_StageBuffer(self.chunk, needed[s]) for s in range(k)]
+        accepted: list[np.ndarray] = []
+
+        def route(stage: int, ids: np.ndarray, rows: dict) -> None:
+            """Advance rows through cached labels; buffer the first
+            stage that actually needs evaluation."""
+            while len(ids):
+                if stage == k:
+                    accepted.append(ids)
+                    return
+                casc = cascades[stage]
+                st = stats.stages[stage]
+                st.rows_in += len(ids)
+                cached = self.store.lookup(casc.key, ids)
+                known = cached >= 0
+                st.rows_cached += int(known.sum())
+                unknown = ~known
+                if unknown.any():
+                    feed(stage, ids[unknown],
+                         {r: rows[r][unknown] for r in buffers[stage].rows})
+                keep = known & (cached == 1)
+                ids = ids[keep]
+                rows = {r: v[keep] for r, v in rows.items()}
+                stage += 1
+
+        def feed(stage: int, ids: np.ndarray, rows: dict) -> None:
+            buf = buffers[stage]
+            pos = 0
+            while pos < len(ids):
+                take = min(buf.cap - buf.fill, len(ids) - pos)
+                sl = slice(pos, pos + take)
+                buf.ids[buf.fill:buf.fill + take] = ids[sl]
+                for r in buf.rows:
+                    buf.rows[r][buf.fill:buf.fill + take] = rows[r][sl]
+                buf.fill += take
+                pos += take
+                if buf.fill == buf.cap:
+                    flush(stage)
+
+        def flush(stage: int) -> None:
+            buf = buffers[stage]
+            nv = buf.fill
+            if nv == 0:
+                return
+            casc = cascades[stage]
+            st = stats.stages[stage]
+            # rows past ``fill`` are stale padding: per-row independence
+            # keeps the valid rows' labels exact regardless
+            pyr = {r: jnp.asarray(buf.rows[r]) for r in casc.resolutions}
+            labels = np.asarray(runners[stage](pyr))[:nv]
+            ids = buf.ids[:nv].copy()
+            down = {r: buf.rows[r][:nv].copy()
+                    for r in (needed[stage + 1] if stage + 1 < k else ())}
+            buf.fill = 0
+            st.rows_evaluated += nv
+            st.batches += 1
+            self.store.record(casc.key, ids, labels)
+            keep = labels == 1
+            route(stage + 1, ids[keep], {r: v[keep]
+                                         for r, v in down.items()})
+
+        ids_all = np.where(mask)[0]
+        stats.rows_scanned = len(ids_all)
+        for lo in range(0, len(ids_all), self.chunk):
+            sel = ids_all[lo:lo + self.chunk]
+            imgs = self.images[sel]
+            if len(sel) < self.chunk:     # static-shape pad (one compile)
+                pad = np.repeat(imgs[-1:], self.chunk - len(sel), axis=0)
+                imgs = np.concatenate([imgs, pad])
+            levels = pyr_fn(jnp.asarray(imgs))
+            rows = {r: np.asarray(levels[r])[:len(sel)] for r in needed[0]}
+            stats.chunks += 1
+            route(0, sel, rows)
+        for s in range(k):                # drain partial buffers in order
+            flush(s)
+
+        if accepted:
+            out = np.sort(np.concatenate(accepted))
+        else:
+            out = np.empty(0, np.int64)
+        return ScanResult(out, stats)
+
+
+# ------------------------------------------------------- reference paths --
+def naive_scan(images, cascades: Sequence[CompiledCascade],
+               metadata: Mapping[str, np.ndarray] | None = None,
+               metadata_eq: Mapping | None = None, *, chunk: int = 64,
+               jit: bool = True,
+               _fn_cache: dict | None = None) -> np.ndarray:
+    """The seed workflow: each predicate's cascade runs a FULL corpus scan
+    (its own pyramid per chunk, no sharing, no masking); masks are ANDed
+    at the end. Bit-identical row set to ScanEngine.execute for the same
+    cascades — the engine only removes redundant work. ``_fn_cache``
+    (dict) lets benchmarks reuse compiled cascades across calls."""
+    import jax
+    import jax.numpy as jnp
+
+    images = np.asarray(images, np.float32)
+    n = len(images)
+    mask = np.ones(n, bool)
+    for col, val in (metadata_eq or {}).items():
+        mask &= np.asarray(metadata[col]) == val
+
+    cache = _fn_cache if _fn_cache is not None else {}
+    for casc in cascades:
+        key = (casc.key, chunk)
+        if key not in cache:
+            # full-width levels, matching ScanEngine (see CompiledCascade)
+            caps = [chunk] * (len(casc.model_fns) - 1)
+            res = tuple(casc.resolutions)
+
+            def run(imgs, _c=casc, _caps=caps, _res=res):
+                # same progressive derivation policy as the engine's
+                # shared pyramid, so labels match bit-for-bit
+                pyr = materialize_pyramid(imgs, _res)
+                return run_cascade_on_pyramid(
+                    pyr, _c.model_fns, _c.thresholds, _c.reps, _caps)[0]
+            cache[key] = jax.jit(run) if jit else run
+        fn = cache[key]
+        col = np.zeros(n, np.int8)
+        for lo in range(0, n, chunk):
+            sel = slice(lo, min(lo + chunk, n))
+            imgs = images[sel]
+            nv = imgs.shape[0]
+            if nv < chunk:
+                pad = np.repeat(imgs[-1:], chunk - nv, axis=0)
+                imgs = np.concatenate([imgs, pad])
+            col[sel] = np.asarray(fn(jnp.asarray(imgs)))[:nv]
+        mask &= col == 1
+    return np.where(mask)[0]
+
+
+def make_batch_runner(casc: CompiledCascade, batch_size: int,
+                      jit: bool = True) -> Callable[[list], list]:
+    """``run_batch`` callable for serve.Batcher / CascadeService: stacks
+    request payloads, runs the cascade (pyramid derivation inside
+    run_cascade_batch), returns per-request int labels."""
+    import jax
+    import jax.numpy as jnp
+
+    caps = (list(casc.capacities) if casc.capacities is not None
+            else [batch_size] * (len(casc.model_fns) - 1))
+
+    def run(imgs):
+        return run_cascade_batch(imgs, casc.model_fns, casc.thresholds,
+                                 casc.reps, caps)[0]
+    fn = jax.jit(run) if jit else run
+
+    def run_batch(payloads: list) -> list:
+        labels = fn(jnp.stack([jnp.asarray(p) for p in payloads]))
+        return [int(v) for v in np.asarray(labels)]
+    return run_batch

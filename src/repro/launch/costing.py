@@ -1,4 +1,4 @@
-"""Roofline cost extraction (DESIGN.md §6).
+"""Roofline cost extraction (DESIGN.md §7).
 
 XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified
 empirically in this container), which undercounts scanned layer stacks by

@@ -1,6 +1,6 @@
 """MLPs and Mixture-of-Experts.
 
-MoE design (DESIGN.md §5): GShard-style *grouped capacity routing* written
+MoE design (DESIGN.md §6): GShard-style *grouped capacity routing* written
 entirely in pjit-friendly ops so XLA SPMD keeps every gather/scatter local:
 
 * tokens are reshaped to (G, Tg, d) routing groups; the step builder picks

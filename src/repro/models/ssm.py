@@ -5,7 +5,7 @@ depthwise causal conv over (x,B,C), SiLU, chunked SSD recurrence, gated
 RMSNorm, out_proj. The projections are *split into separate weights* (w_z,
 w_x, w_b, w_c, w_dt and conv_x/conv_b/conv_c) — algebraically identical to
 the fused layouts (depthwise conv has no cross-channel mixing) but each
-piece then carries its own clean PartitionSpec (DESIGN.md §5).
+piece then carries its own clean PartitionSpec (DESIGN.md §6).
 
 TP head padding: SSM heads are padded like attention heads; padded-head
 outputs are zero-masked before the gated norm and the norm denominator uses

@@ -1,12 +1,15 @@
 """Request batching for serving (paper-kind: inference over a corpus /
 request stream). Size-or-deadline batching with fixed TPU-friendly batch
 shapes (pad-to-capacity), plus simple latency accounting for tests and
-the serve_cascade example."""
+the serve_cascade example. ``CascadeService`` stacks one Batcher per
+predicate so a mixed request stream ("does this frame contain a?" /
+"...contain b?") is routed into per-cascade batches — the online face of
+the query engine (engine/scan.make_batch_runner builds the runners)."""
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable
+from typing import Any, Callable, Mapping
 
 
 @dataclass
@@ -66,3 +69,42 @@ class Batcher:
             self.stats.latencies.append(now - r.t_arrival)
         self.stats.batches += 1
         self.stats.padded_slots += pad
+
+
+class CascadeService:
+    """Multi-predicate serving front: one Batcher per concept, all
+    sharing the caller's runner table ({concept -> run_batch}, e.g.
+    jitted cascade executors from engine/scan.make_batch_runner).
+    ``submit`` routes a request to its predicate's batch; poll/drain fan
+    out to every batcher so deadlines hold across concepts."""
+
+    def __init__(self, runners: Mapping[str, Callable[[list], list]],
+                 batch_size: int, max_wait_s: float = 0.01,
+                 clock=time.perf_counter):
+        self.batchers = {c: Batcher(fn, batch_size, max_wait_s, clock)
+                         for c, fn in runners.items()}
+
+    @property
+    def concepts(self):
+        return list(self.batchers)
+
+    def submit(self, concept: str, req: Request):
+        self.batchers[concept].submit(req)
+
+    def poll(self):
+        for b in self.batchers.values():
+            b.poll()
+
+    def drain(self):
+        for b in self.batchers.values():
+            b.drain()
+
+    @property
+    def stats(self) -> dict[str, BatcherStats]:
+        return {c: b.stats for c, b in self.batchers.items()}
+
+    def latencies(self) -> list:
+        out = []
+        for b in self.batchers.values():
+            out.extend(b.stats.latencies)
+        return out

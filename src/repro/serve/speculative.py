@@ -1,5 +1,5 @@
 """Speculative decoding — the paper's cascade idea applied to generation
-(DESIGN.md §4): a cheap DRAFT model proposes gamma tokens; the TRUSTED
+(DESIGN.md §5): a cheap DRAFT model proposes gamma tokens; the TRUSTED
 model verifies them in one batched forward; the accepted prefix advances
 the sequence. With greedy decoding the output is PROVABLY identical to
 decoding the trusted model alone (tested), while the trusted model runs

@@ -1,4 +1,4 @@
-"""Elastic checkpointing (fault tolerance substrate; DESIGN.md §7).
+"""Elastic checkpointing (fault tolerance substrate; DESIGN.md §8).
 
 Layout: <dir>/step_<n>/manifest.json + one .npy per pytree leaf.
 The manifest records the flattened treedef paths, dtypes, shapes, step,

@@ -1,5 +1,5 @@
 """Gradient compression for the data-parallel reduction (large-scale
-distributed-optimization trick; DESIGN.md §5).
+distributed-optimization trick; DESIGN.md §6).
 
 Two error-feedback compressors, composable in front of the optimizer:
 

@@ -1,4 +1,4 @@
-"""Pipeline parallelism over the 'pod' axis (DESIGN.md §5).
+"""Pipeline parallelism over the 'pod' axis (DESIGN.md §6).
 
 GPipe-style fill/drain schedule written with shard_map +
 lax.ppermute: each pod stage holds half the layer stack; microbatch

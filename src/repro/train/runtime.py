@@ -1,4 +1,4 @@
-"""Fault-tolerant training runtime (DESIGN.md §5/§7).
+"""Fault-tolerant training runtime (DESIGN.md §6/§8).
 
 The loop treats the jitted step as a pure function of (params, opt_state,
 batch), which makes recovery trivial: on ANY step failure we restore the

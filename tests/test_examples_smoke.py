@@ -1,0 +1,43 @@
+"""Examples must keep running end-to-end: each script is executed as a
+subprocess at --tiny scale so drift between the library and the examples
+can't rot silently. (The heavier full-scale runs stay manual.)"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+SRC = str(ROOT / "src")
+
+
+def _run_example(name: str, args: list[str], timeout: int = 540):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, str(ROOT / "examples" / name), *args],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert r.returncode == 0, \
+        f"{name} failed:\n{r.stdout[-2000:]}\n{r.stderr[-3000:]}"
+    return r.stdout
+
+
+def test_quickstart_smoke():
+    out = _run_example("quickstart.py", ["--tiny"])
+    assert "Pareto frontier" in out
+    assert "matches" in out
+
+
+def test_query_engine_smoke():
+    out = _run_example("query_engine.py", ["--tiny"])
+    assert "PHYSICAL PLAN" in out
+    assert "identical rows: True" in out
+    assert "reused from virtual columns" in out
+
+
+@pytest.mark.slow
+def test_serve_cascade_smoke():
+    out = _run_example("serve_cascade.py", ["--tiny"])
+    assert "served 48 mixed requests" in out
+    assert "latency p50" in out

@@ -1,0 +1,368 @@
+"""Query planner + unified scan engine (DESIGN.md §4): predicate
+ordering must match the brute-force-optimal ordering, the engine's row
+set must be bit-identical to naive per-predicate full scans, partial
+virtual columns must eliminate re-evaluation, and run_query must never
+evaluate a binary predicate on rows already eliminated."""
+import itertools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cascade import CascadeSpace, KIND_SINGLE
+from repro.core.query import BinaryPredicate, Corpus, run_query
+from repro.core.selector import cascade_eval_labels, estimate_selectivity
+from repro.core.transforms import Representation
+from repro.engine.planner import (PhysicalPlan, PredicateClause, QuerySpec,
+                                  expected_scan_cost, order_predicates,
+                                  plan_query)
+from repro.engine.scan import (CompiledCascade, ScanEngine, naive_scan)
+
+
+def _uint8_images(n, hw, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.integers(0, 256, (n, hw, hw, 3))
+            .astype(np.float32) / 256.0)
+
+
+def _toy_cascade(concept, seed, thresholds=None, hw=32):
+    """3-level linear toy cascade with spread (sigmoid) scores so all
+    levels see traffic and selectivity is non-trivial."""
+    r = np.random.default_rng(seed)
+    reps = [Representation(hw // 4, "gray"), Representation(hw // 2, "r"),
+            Representation(hw, "rgb")]
+    dims = [(hw // 4) ** 2, (hw // 2) ** 2, hw * hw * 3]
+    ws = [jnp.asarray(r.standard_normal((d, 1)).astype(np.float32))
+          for d in dims]
+
+    def mk(i):
+        def f(x):
+            z = (x.reshape(x.shape[0], -1) - 0.5) @ ws[i]
+            return jax.nn.sigmoid(z[:, 0] * 60.0 / math.sqrt(dims[i]))
+        return f
+    ths = thresholds or [(0.2, 0.8), (0.3, 0.7), (None, None)]
+    return CompiledCascade(concept, ("toy", seed), reps,
+                           [mk(0), mk(1), mk(2)], list(ths))
+
+
+# ----------------------------------------------------------- ordering -----
+def test_order_predicates_matches_brute_force():
+    rng = np.random.default_rng(0)
+    for trial in range(30):
+        k = int(rng.integers(2, 5))
+        costs = rng.uniform(0.1, 10.0, k)
+        sels = rng.uniform(0.05, 0.95, k)
+        best = min(itertools.permutations(range(k)),
+                   key=lambda p: expected_scan_cost(costs, sels, p))
+        got = order_predicates(costs, sels)
+        assert math.isclose(expected_scan_cost(costs, sels, got),
+                            expected_scan_cost(costs, sels, best),
+                            rel_tol=1e-12), (trial, got, best)
+
+
+def test_order_predicates_edge_cases():
+    # selectivity 1.0 (filters nothing) goes last regardless of cost
+    order = order_predicates([0.001, 5.0], [1.0, 0.5])
+    assert order == [1, 0]
+    # equal ranks tie-break by cost
+    order = order_predicates([2.0, 1.0], [0.5, 0.5])
+    assert order == [1, 0]
+
+
+def test_expected_scan_cost_masks_later_predicates():
+    # second predicate only pays on the first one's survivors
+    assert expected_scan_cost([1.0, 1.0], [0.25, 0.5]) == 1.25
+
+
+# ------------------------------------------------- selectivity estimate ---
+def _single_space(n_models, times):
+    return CascadeSpace(
+        acc=np.linspace(0.5, 0.9, n_models),
+        time_s=np.asarray(times, np.float64),
+        kind=np.full(n_models, KIND_SINGLE, np.int8),
+        i1=np.arange(n_models, dtype=np.int32),
+        i2=np.full(n_models, -1, np.int32),
+        n_targets=1, trusted=n_models - 1, evaluated=n_models)
+
+
+def test_estimate_selectivity_single_model():
+    scores = np.array([[0.9, 0.1, 0.8, 0.2, 0.6]])
+    space = _single_space(1, [1.0])
+    p_low = np.zeros((1, 1))
+    p_high = np.ones((1, 1))
+    labels = cascade_eval_labels(space, 0, scores, p_low, p_high)
+    assert (labels == (scores[0] >= 0.5)).all()
+    assert estimate_selectivity(space, 0, scores, p_low, p_high) == 0.6
+
+
+# ------------------------------------------------------- scan engine ------
+@pytest.fixture(scope="module")
+def toy_setup():
+    imgs = _uint8_images(210, 32, seed=4)
+    cascades = [
+        _toy_cascade("a", 1),
+        _toy_cascade("b", 2, [(0.25, 0.75), (0.3, 0.7), (None, None)]),
+        _toy_cascade("c", 3, [(0.2, 0.8), (0.35, 0.65), (None, None)]),
+    ]
+    metadata = {"cam": np.arange(len(imgs)) % 2}
+    return imgs, cascades, metadata
+
+
+def test_engine_bit_identical_to_naive_full_scan(toy_setup):
+    imgs, cascades, metadata = toy_setup
+    for k in (2, 3):
+        eng = ScanEngine(imgs, metadata, chunk=64)
+        res = eng.execute(cascades[:k], {"cam": 0})
+        ref = naive_scan(imgs, cascades[:k], metadata, {"cam": 0},
+                         chunk=64)
+        assert np.array_equal(res.indices, ref), k
+        assert len(ref) > 0          # non-degenerate query
+
+
+def test_engine_chunk_size_does_not_change_rows(toy_setup):
+    imgs, cascades, metadata = toy_setup
+    outs = []
+    for chunk in (32, 64, 128):
+        eng = ScanEngine(imgs, metadata, chunk=chunk)
+        outs.append(eng.execute(cascades, {"cam": 0}).indices)
+    assert np.array_equal(outs[0], outs[1])
+    assert np.array_equal(outs[1], outs[2])
+
+
+def test_engine_masking_skips_eliminated_rows(toy_setup):
+    """The core regression: predicate k+1 must evaluate ONLY predicate
+    k's survivors (plus nothing when metadata kills a row)."""
+    imgs, cascades, metadata = toy_setup
+    eng = ScanEngine(imgs, metadata, chunk=64)
+    res = eng.execute(cascades, {"cam": 0})
+    st = res.stats.stages
+    n_meta = int((metadata["cam"] == 0).sum())
+    assert res.stats.rows_scanned == n_meta
+    assert st[0].rows_evaluated == n_meta
+    # survivors shrink monotonically and stage k+1 never sees more rows
+    # than stage k passed
+    col0 = eng.store.column(cascades[0].key)
+    assert st[1].rows_in == int((col0[metadata["cam"] == 0] == 1).sum())
+    assert st[1].rows_evaluated == st[1].rows_in
+    assert st[2].rows_in < st[1].rows_in < st[0].rows_in
+
+
+def test_engine_virtual_column_cache(toy_setup):
+    imgs, cascades, metadata = toy_setup
+    eng = ScanEngine(imgs, metadata, chunk=64)
+    first = eng.execute(cascades, {"cam": 0})
+    # identical re-run: zero evaluation, pure cache hits
+    again = eng.execute(cascades, {"cam": 0})
+    assert np.array_equal(again.indices, first.indices)
+    assert again.stats.rows_evaluated == 0
+    assert all(s.rows_cached == s.rows_in for s in again.stats.stages)
+    # re-planned (reversed) order: only the complement is evaluated
+    rev = eng.execute(cascades[::-1], {"cam": 0})
+    assert np.array_equal(rev.indices, first.indices)
+    assert rev.stats.rows_evaluated < first.stats.rows_evaluated
+    assert sum(s.rows_cached for s in rev.stats.stages) > 0
+    # widened query (drop the metadata filter): prior rows reused
+    wide = eng.execute(cascades)
+    ref = naive_scan(imgs, cascades, metadata, None, chunk=64)
+    assert np.array_equal(wide.indices, ref)
+    assert wide.stats.stages[0].rows_cached == first.stats.rows_scanned
+
+
+def test_engine_no_binary_predicates(toy_setup):
+    imgs, _, metadata = toy_setup
+    eng = ScanEngine(imgs, metadata, chunk=64)
+    res = eng.execute([], {"cam": 1})
+    assert np.array_equal(res.indices, np.where(metadata["cam"] == 1)[0])
+
+
+def test_engine_ignores_serving_capacities(toy_setup):
+    """Capacity-capped levels force overflow rows to batch-packing-
+    dependent labels — a serving-only tradeoff. Scan paths must ignore
+    casc.capacities (full-width levels) so row sets stay exact and
+    virtual columns cacheable."""
+    import dataclasses
+
+    imgs, cascades, metadata = toy_setup
+    capped = [dataclasses.replace(c, capacities=[4, 2]) for c in cascades]
+    eng = ScanEngine(imgs, metadata, chunk=64)
+    want = ScanEngine(imgs, metadata, chunk=64).execute(
+        cascades, {"cam": 0}).indices
+    res = eng.execute(capped, {"cam": 0})
+    ref = naive_scan(imgs, capped, metadata, {"cam": 0}, chunk=64)
+    assert np.array_equal(res.indices, want)
+    assert np.array_equal(res.indices, ref)
+
+
+def test_engine_empty_metadata_survivors(toy_setup):
+    imgs, cascades, metadata = toy_setup
+    eng = ScanEngine(imgs, metadata, chunk=64)
+    res = eng.execute(cascades, {"cam": 99})
+    assert len(res.indices) == 0
+    assert res.stats.rows_evaluated == 0
+
+
+def test_executor_caller_provided_pyramid_bit_identical(toy_setup):
+    """run_cascade_batch with a pre-materialized pyramid_cache (the
+    engine's shared-pyramid path) must reproduce the self-derived path
+    bit-for-bit."""
+    from repro.core.executor import run_cascade_batch
+    from repro.core.transforms import materialize_pyramid
+
+    imgs, cascades, _ = toy_setup
+    casc = cascades[0]
+    batch = jnp.asarray(imgs[:64])
+    caps = [64, 64]
+    l1, s1 = run_cascade_batch(batch, casc.model_fns, casc.thresholds,
+                               casc.reps, caps)
+    pyr = materialize_pyramid(batch, casc.resolutions)
+    l2, s2 = run_cascade_batch(batch, casc.model_fns, casc.thresholds,
+                               casc.reps, caps, pyramid_cache=pyr)
+    assert (np.asarray(l1) == np.asarray(l2)).all()
+    assert (np.asarray(s1["levels_used"])
+            == np.asarray(s2["levels_used"])).all()
+
+
+# ------------------------------------------------------ run_query fix -----
+class _CountingExecutor:
+    def __init__(self, fn):
+        self.fn = fn
+        self.calls = 0
+        self.rows = 0
+
+    def __call__(self, imgs):
+        self.calls += 1
+        self.rows += len(imgs)
+        return self.fn(imgs)
+
+
+def test_run_query_skips_eliminated_rows():
+    """Regression (pre-refactor bug): binary predicates ran a FULL corpus
+    scan regardless of the metadata filter and earlier predicates."""
+    n, batch = 96, 16
+    imgs = _uint8_images(n, 16, seed=1)
+    meta = {"cam": np.arange(n) % 4}           # filter keeps n/4 rows
+    ex1 = _CountingExecutor(
+        lambda im: (im.mean(axis=(1, 2, 3)) > 0.5).astype(np.int32))
+    ex2 = _CountingExecutor(
+        lambda im: (im[:, 0, 0, 0] > 0.5).astype(np.int32))
+    corpus = Corpus(images=imgs, metadata=meta)
+    ids = run_query(corpus, metadata_eq={"cam": 0},
+                    binary_preds=[BinaryPredicate("p1", ex1),
+                                  BinaryPredicate("p2", ex2)],
+                    batch_size=batch)
+    n_meta = n // 4
+    assert ex1.calls == math.ceil(n_meta / batch)
+    assert ex1.rows == ex1.calls * batch       # padded batches only
+    # second predicate saw only the first predicate's survivors
+    col1 = corpus.virtual_columns["p1"]
+    n_surv = int((col1[meta["cam"] == 0] == 1).sum())
+    assert ex2.calls == math.ceil(n_surv / batch)
+    # results match the brute-force reference
+    brute = np.where((meta["cam"] == 0)
+                     & (imgs.mean(axis=(1, 2, 3)) > 0.5)
+                     & (imgs[:, 0, 0, 0] > 0.5))[0]
+    assert np.array_equal(ids, brute)
+    # repeated query: fully answered from the partial virtual columns
+    ids2 = run_query(corpus, metadata_eq={"cam": 0},
+                     binary_preds=[BinaryPredicate("p1", ex1),
+                                   BinaryPredicate("p2", ex2)],
+                     batch_size=batch)
+    assert np.array_equal(ids2, ids)
+    assert ex1.calls == math.ceil(n_meta / batch)   # unchanged
+
+
+def test_run_query_partial_columns_extend():
+    """A wider follow-up query evaluates only the not-yet-known rows."""
+    n, batch = 64, 16
+    imgs = _uint8_images(n, 16, seed=2)
+    meta = {"cam": np.arange(n) % 2}
+    ex = _CountingExecutor(
+        lambda im: (im.mean(axis=(1, 2, 3)) > 0.5).astype(np.int32))
+    corpus = Corpus(images=imgs, metadata=meta)
+    run_query(corpus, metadata_eq={"cam": 0},
+              binary_preds=[BinaryPredicate("p", ex)], batch_size=batch)
+    rows_first = ex.rows
+    run_query(corpus, binary_preds=[BinaryPredicate("p", ex)],
+              batch_size=batch)
+    # second (unfiltered) query only evaluated the cam=1 half
+    assert ex.rows - rows_first <= math.ceil((n // 2) / batch) * batch
+    assert (corpus.virtual_columns["p"] != -1).all()
+
+
+# ----------------------------------------------------- planner + plan -----
+def test_plan_query_end_to_end_with_trained_system():
+    """Tiny trained system -> plan -> engine == naive, and the EXPLAIN
+    output names every predicate with cost/selectivity estimates."""
+    from repro.configs.base import TahomaCNNConfig
+    from repro.core.pipeline import initialize_system
+    from repro.data.synthetic import (DEFAULT_PREDICATES, make_corpus,
+                                      make_multi_corpus, three_way_split)
+
+    specs = DEFAULT_PREDICATES[:2]
+    reps = [Representation(8, "gray"), Representation(16, "gray"),
+            Representation(32, "rgb")]
+    systems = {}
+    for spec in specs:
+        x, y = make_corpus(spec, 160, hw=32, seed=0)
+        systems[spec.name] = initialize_system(
+            *three_way_split(x, y, seed=1),
+            [TahomaCNNConfig(1, 8, 16)], reps, steps=30)
+    # space memoization: planning twice reuses the evaluated space
+    s0 = systems[specs[0].name].cascade_space("CAMERA")
+    assert systems[specs[0].name].cascade_space("CAMERA") is s0
+
+    qx, _ = make_multi_corpus(specs, 128, hw=32, seed=5,
+                              positive_rate=0.4)
+    metadata = {"cam": np.arange(len(qx)) % 2}
+    spec_q = QuerySpec(metadata_eq={"cam": 0},
+                       predicates=[PredicateClause(s.name) for s in specs])
+    plan = plan_query(systems, spec_q, scenario="CAMERA",
+                      metadata=metadata)
+    assert isinstance(plan, PhysicalPlan)
+    assert len(plan.predicates) == 2
+    # ordering respects the rank rule
+    ranks = [p.rank for p in plan.predicates]
+    assert ranks == sorted(ranks)
+    txt = plan.explain(n_rows=len(qx))
+    for s in specs:
+        assert f"contains({s.name})" in txt
+    assert "cost/row" in txt and "sel=" in txt and "PHYSICAL PLAN" in txt
+    assert plan.meta_selectivity == 0.5
+
+    eng = ScanEngine(qx, metadata, chunk=32)
+    res = eng.execute(plan.cascades, plan.metadata_eq)
+    ref = naive_scan(qx, plan.cascades, metadata, plan.metadata_eq,
+                     chunk=32)
+    assert np.array_equal(res.indices, ref)
+
+
+# --------------------------------------------------------- service --------
+def test_cascade_service_routes_and_batches(toy_setup):
+    from repro.engine.scan import make_batch_runner
+    from repro.serve.batcher import CascadeService, Request
+
+    imgs, cascades, _ = toy_setup
+    bs = 16
+    service = CascadeService(
+        {c.concept: make_batch_runner(c, bs) for c in cascades[:2]},
+        batch_size=bs, max_wait_s=10.0)
+    reqs = []
+    for i in range(40):
+        concept = cascades[i % 2].concept
+        r = Request(i, jnp.asarray(imgs[i]))
+        service.submit(concept, r)
+        reqs.append((concept, i, r))
+    service.drain()
+    assert all(r.result in (0, 1) for _, _, r in reqs)
+    # routing: each concept's batcher saw exactly its own requests
+    st = service.stats
+    assert st["a"].batches == 2 and st["b"].batches == 2
+    # results agree with the unbatched cascade run
+    eng = ScanEngine(imgs[:40], chunk=bs)
+    eng_res = eng.execute([cascades[0]])
+    want = set(eng_res.indices[eng_res.indices % 2 == 0])
+    got = {i for c, i, r in reqs if c == "a" and r.result == 1 and
+           i % 2 == 0}
+    assert got == {i for i in want if i % 2 == 0}

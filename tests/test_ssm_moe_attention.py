@@ -147,7 +147,7 @@ def _embed_padded(p1, cfg1, cfg2):
 
 def test_head_padding_exact():
     """Padded-TP attention == unpadded attention bit-for-bit-ish (the
-    numerics-preservation claim in DESIGN.md §5)."""
+    numerics-preservation claim in DESIGN.md §6)."""
     base = dict(name="t", family="dense", n_layers=1, d_model=24,
                 n_heads=6, n_kv_heads=2, d_ff=32, vocab_size=64,
                 head_dim=4, dtype="float32")
