@@ -15,7 +15,14 @@
    per-predicate full scans;
 4. re-run a re-planned query to show partial virtual-column reuse.
 
+With ``--shards N`` the survivor set is partitioned across N shard
+executors (DESIGN.md §9: pmap lockstep over the host's devices; set
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to simulate a
+multi-chip host on CPU) and EXPLAIN additionally prints the shard
+layout. Row sets are bit-identical to the unsharded engine.
+
   PYTHONPATH=src python examples/query_engine.py [--scenario CAMERA]
+                                                 [--shards N]
 """
 import argparse
 import sys
@@ -24,14 +31,20 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
+# simulate a multi-chip host on CPU for the sharded path; the flag must
+# land before the first jax import (the repro imports below pull jax in)
+from repro.launch.devsim import force_host_devices  # noqa: E402
+
+force_host_devices(8, when_flag="--shards")
+
 import numpy as np  # noqa: E402
 
 from repro.configs.base import TahomaCNNConfig  # noqa: E402
-from repro.core.pipeline import initialize_system  # noqa: E402
+from repro.core.pipeline import build_scan_engine, initialize_system  # noqa: E402
 from repro.core.transforms import Representation  # noqa: E402
 from repro.data.synthetic import (DEFAULT_PREDICATES, make_corpus,  # noqa: E402
                                   make_multi_corpus, three_way_split)
-from repro.engine import (PredicateClause, QuerySpec, ScanEngine,  # noqa: E402
+from repro.engine import (PredicateClause, QuerySpec,  # noqa: E402
                           naive_scan, plan_query)
 
 
@@ -41,6 +54,11 @@ def main():
                     choices=["INFER_ONLY", "ARCHIVE", "ONGOING", "CAMERA"])
     ap.add_argument("--min-accuracy", type=float, default=0.8)
     ap.add_argument("--chunk", type=int, default=64)
+    ap.add_argument("--shards", type=int, default=0,
+                    help="partition the scan across N shard executors "
+                         "(0 = single-host engine)")
+    ap.add_argument("--shard-strategy", default="range",
+                    choices=["range", "hash"])
     ap.add_argument("--tiny", action="store_true",
                     help="smoke-test scale (CI)")
     args = ap.parse_args()
@@ -82,12 +100,21 @@ def main():
                     for s in specs])
     plan = plan_query(systems, spec_q, scenario=args.scenario,
                       metadata=metadata)
-    print()
-    print(plan.explain(n_rows=n_query))
 
-    engine = ScanEngine(qx, metadata, chunk=args.chunk)
+    engine = build_scan_engine(qx, metadata, shards=args.shards,
+                               chunk=args.chunk,
+                               strategy=args.shard_strategy)
+    shard_plan = (engine.plan_for(plan.cascades, plan.metadata_eq)
+                  if args.shards else None)
+    print()
+    print(plan.explain(n_rows=n_query, shard_plan=shard_plan))
+
     t0 = time.perf_counter()
-    res = engine.execute(plan.cascades, plan.metadata_eq)
+    if shard_plan is not None:           # execute the layout EXPLAIN shows
+        res = engine.execute(plan.cascades, plan.metadata_eq,
+                             shard_plan=shard_plan)
+    else:
+        res = engine.execute(plan.cascades, plan.metadata_eq)
     t_engine = time.perf_counter() - t0
 
     t0 = time.perf_counter()
@@ -103,6 +130,13 @@ def main():
     for s in res.stats.stages:
         print(f"  {s.concept}: {s.rows_in} in -> {s.rows_evaluated} "
               f"evaluated ({s.batches} batches, {s.rows_cached} cached)")
+    if args.shards:
+        st = res.stats
+        print(f"  shards: {st.plan.describe()}  backend={st.backend} "
+              f"devices={st.n_devices} supersteps={st.supersteps}")
+        for i, sh in enumerate(st.shards):
+            print(f"    shard {i}: {sh.rows_scanned} rows -> "
+                  f"{sh.rows_evaluated} evaluated ({sh.chunks} chunks)")
     if len(res.indices):
         tp = qlabels[res.indices].all(axis=1).mean()
         print(f"  precision vs ground truth (all predicates): {tp:.2f}")

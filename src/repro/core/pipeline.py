@@ -242,3 +242,21 @@ def initialize_system(train_split, config_split, eval_split,
     eval_scores = bank.score_matrix(ev_x)
     return TahomaSystem(bank, p_low, p_high, infer_s, profile,
                         eval_scores, ev_y, tuple(targets))
+
+
+def build_scan_engine(images, metadata=None, *, shards: int | None = None,
+                      chunk: int = 64, jit: bool = True,
+                      strategy: str = "range"):
+    """System-level scan-executor factory (the ``--shards N`` path in
+    examples/ and benchmarks/): ``shards=None``/0 builds the single-host
+    ScanEngine; any explicit shard count (including 1, for scaling-curve
+    baselines) builds the sharded engine (DESIGN.md §9). Both share the
+    same execute(cascades, metadata_eq) surface and virtual-column
+    semantics."""
+    from repro.engine.scan import ScanEngine
+    from repro.engine.sharded import ShardedScanEngine
+
+    if shards:
+        return ShardedScanEngine(images, metadata, shards=int(shards),
+                                 chunk=chunk, jit=jit, strategy=strategy)
+    return ScanEngine(images, metadata, chunk=chunk, jit=jit)

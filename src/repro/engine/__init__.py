@@ -6,12 +6,15 @@ from repro.engine.planner import (PhysicalPlan, PlannedPredicate,
                                   plan_query, predicate_rank)
 from repro.engine.scan import (CompiledCascade, ScanEngine, ScanResult,
                                ScanStats, VirtualColumnStore,
-                               make_batch_runner, naive_scan)
+                               make_batch_runner, naive_scan, stage_needs)
+from repro.engine.sharded import (ShardedScanEngine, ShardedScanResult,
+                                  ShardedScanStats)
 
 __all__ = [
     "CompiledCascade", "PhysicalPlan", "PlannedPredicate",
     "PredicateClause", "QuerySpec", "ScanEngine", "ScanResult",
-    "ScanStats", "VirtualColumnStore", "expected_scan_cost",
+    "ScanStats", "ShardedScanEngine", "ShardedScanResult",
+    "ShardedScanStats", "VirtualColumnStore", "expected_scan_cost",
     "make_batch_runner", "naive_scan", "order_predicates", "plan_query",
-    "predicate_rank",
+    "predicate_rank", "stage_needs",
 ]

@@ -70,9 +70,12 @@ class PhysicalPlan:
             [p.cascade.cost_s for p in self.predicates],
             [p.cascade.selectivity for p in self.predicates])
 
-    def explain(self, n_rows: int | None = None) -> str:
+    def explain(self, n_rows: int | None = None,
+                shard_plan=None) -> str:
         """EXPLAIN-style physical plan: predicate order, chosen cascade,
-        estimated cost + selectivity per predicate, totals."""
+        estimated cost + selectivity per predicate, totals. With a
+        ``ShardPlan`` (sharding/policy.py) the plan also reports the
+        shard layout and the estimated per-shard scan cost."""
         lines = [f"PHYSICAL PLAN  scenario={self.scenario}  "
                  f"binary predicates={len(self.predicates)}"]
         meta = " AND ".join(f"{k} == {v!r}"
@@ -104,6 +107,17 @@ class PhysicalPlan:
             lines.append(f"  est. rows: {n_rows} scanned -> "
                          f"{n_rows * m:.0f} past metadata -> "
                          f"{n_rows * m * survive:.0f} returned")
+        if shard_plan is not None:
+            lines.append(f"  sharding: {shard_plan.describe()}")
+            # per-shard cost follows the plan's own (possibly skew-aware)
+            # weights: shard i's share of the total estimated scan cost
+            total_w = sum(shard_plan.weights) or 1.0
+            total_cost = eng * shard_plan.n_rows
+            for i, (part, w) in enumerate(zip(shard_plan.shards,
+                                              shard_plan.weights)):
+                cost = total_cost * w / total_w
+                lines.append(f"    shard {i}: {len(part)} rows  "
+                             f"weight {w:.3g}  est {cost * 1e3:.1f}ms")
         return "\n".join(lines)
 
 

@@ -87,6 +87,48 @@ class VirtualColumnStore:
     def known_rows(self, key: tuple) -> int:
         return int((self.column(key) >= 0).sum())
 
+    def keys(self) -> list[tuple]:
+        return list(self._cols)
+
+    def seed_from(self, other: "VirtualColumnStore", rows) -> None:
+        """Copy ``other``'s labels for ``rows`` only — the shard-store
+        seed: a shard executor never looks beyond its partition, so
+        seeding its row slice is enough (and O(partition), not
+        O(corpus), per shard)."""
+        assert other.n_rows == self.n_rows
+        for key in other.keys():
+            self.column(key)[rows] = other.column(key)[rows]
+
+    def merge_from(self, other: "VirtualColumnStore") -> None:
+        """Union of computed entries: ``other``'s known labels fill this
+        store's unknown (-1) slots. A computed entry is NEVER overwritten
+        — neither by -1 nor by a conflicting label — so merging shard
+        stores in any order yields the same corpus-wide store as long as
+        shards evaluated disjoint rows (the ShardPlan invariant)."""
+        assert other.n_rows == self.n_rows
+        for key in other.keys():
+            src = other.column(key)
+            dst = self.column(key)
+            fill = (dst < 0) & (src >= 0)
+            dst[fill] = src[fill]
+
+
+def stage_needs(cascades: Sequence[CompiledCascade],
+                base_hw: int) -> tuple[list, tuple]:
+    """``needed[s]``: pyramid resolutions stages >= s still require (rows
+    entering stage s carry exactly these pooled levels); ``union_res``:
+    the per-chunk materialization set — needed[0] plus the raw base so
+    every level derives from the same progressive pyramid the cost model
+    prices. Shared by the serial chunk loop and the sharded lockstep."""
+    needed: list[list[int]] = []
+    acc: set[int] = set()
+    for c in reversed(cascades):
+        acc |= {r.resolution for r in c.reps}
+        needed.append(sorted(acc, reverse=True))
+    needed = needed[::-1]
+    union_res = tuple(sorted(set(needed[0]) | {base_hw}, reverse=True))
+    return needed, union_res
+
 
 @dataclass
 class StageStats:
@@ -181,25 +223,32 @@ class ScanEngine:
                 metadata_eq: Mapping | None = None) -> ScanResult:
         """SELECT row ids WHERE metadata_eq AND every cascade labels 1,
         evaluating cascades in the given (planner's) order."""
+        mask = self.metadata_mask(metadata_eq)
+        ids_all = np.where(mask)[0]
+        if not cascades:
+            return ScanResult(ids_all, ScanStats())
+        return self.scan_rows(cascades, ids_all)
+
+    def scan_rows(self, cascades: Sequence[CompiledCascade],
+                  ids_all: np.ndarray, *,
+                  store: VirtualColumnStore | None = None) -> ScanResult:
+        """The shard-invocable scan unit: run the chunk/stage pipeline
+        over exactly ``ids_all`` (already metadata-filtered row ids),
+        reading and writing ``store`` (default: this engine's corpus-wide
+        store). ShardedScanEngine (engine/sharded.py) drives one call per
+        shard against shard-local stores; ``execute`` is the 1-shard
+        case over the whole survivor set."""
         import jax.numpy as jnp
 
+        store = self.store if store is None else store
         cascades = list(cascades)
         k = len(cascades)
         stats = ScanStats(stages=[StageStats(c.concept) for c in cascades])
-        mask = self.metadata_mask(metadata_eq)
+        ids_all = np.asarray(ids_all, np.int64)
         if k == 0:
-            return ScanResult(np.where(mask)[0], stats)
+            return ScanResult(np.sort(ids_all), stats)
 
-        base_hw = self.images.shape[1]
-        # needed[s]: pyramid resolutions stages >= s still require
-        needed: list[list[int]] = []
-        acc: set[int] = set()
-        for c in reversed(cascades):
-            acc |= {r.resolution for r in c.reps}
-            needed.append(sorted(acc, reverse=True))
-        needed = needed[::-1]
-        union_res = tuple(sorted(set(needed[0]) | {base_hw}, reverse=True))
-
+        needed, union_res = stage_needs(cascades, self.images.shape[1])
         pyr_fn = self._pyramid_fn(union_res)
         runners = [self._cascade_fn(c) for c in cascades]
         buffers = [_StageBuffer(self.chunk, needed[s]) for s in range(k)]
@@ -215,7 +264,7 @@ class ScanEngine:
                 casc = cascades[stage]
                 st = stats.stages[stage]
                 st.rows_in += len(ids)
-                cached = self.store.lookup(casc.key, ids)
+                cached = store.lookup(casc.key, ids)
                 known = cached >= 0
                 st.rows_cached += int(known.sum())
                 unknown = ~known
@@ -258,12 +307,11 @@ class ScanEngine:
             buf.fill = 0
             st.rows_evaluated += nv
             st.batches += 1
-            self.store.record(casc.key, ids, labels)
+            store.record(casc.key, ids, labels)
             keep = labels == 1
             route(stage + 1, ids[keep], {r: v[keep]
                                          for r, v in down.items()})
 
-        ids_all = np.where(mask)[0]
         stats.rows_scanned = len(ids_all)
         for lo in range(0, len(ids_all), self.chunk):
             sel = ids_all[lo:lo + self.chunk]

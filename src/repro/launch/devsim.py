@@ -1,0 +1,34 @@
+"""Simulated multi-device host bootstrap (DESIGN.md §9).
+
+jax reads ``XLA_FLAGS`` once, at first import — so forcing the host
+platform to expose N simulated devices must happen before anything
+imports jax. This module deliberately imports nothing heavy; call
+``force_host_devices`` at the very top of an entry point, before the
+repro imports. tests/conftest.py applies the same flag for the test
+suite (inline, so it also runs before the hypothesis shim setup).
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+_DEVFLAG = "--xla_force_host_platform_device_count"
+
+
+def force_host_devices(n: int = 8, *, when_flag: str | None = None) -> None:
+    """Idempotently force the XLA host platform to expose ``n`` devices.
+
+    No-op when jax is already imported (the flag would be read too late)
+    or when the operator already set a device count. ``when_flag``
+    restricts the bootstrap to invocations carrying that CLI flag, in
+    either the ``--flag value`` or ``--flag=value`` spelling."""
+    if when_flag is not None and not any(
+            a == when_flag or a.startswith(when_flag + "=")
+            for a in sys.argv):
+        return
+    if "jax" in sys.modules:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if _DEVFLAG in flags:
+        return
+    os.environ["XLA_FLAGS"] = f"{flags} {_DEVFLAG}={n}".strip()

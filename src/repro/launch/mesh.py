@@ -44,3 +44,23 @@ def make_host_mesh(model_axis: int = 1, data_axis: int | None = None):
     n = len(jax.devices())
     data_axis = data_axis or (n // model_axis)
     return make_mesh_compat((data_axis, model_axis), ("data", "model"))
+
+
+# --------------------------------------------------- scan-shard placement --
+def host_device_count() -> int:
+    """Devices visible to this process. On CPU CI this is 1 unless
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` was set
+    before the first jax import (tests/conftest.py does)."""
+    return len(jax.devices())
+
+
+def shard_devices(n_shards: int | None = None) -> list:
+    """Device placement for the sharded scan engine (DESIGN.md §9): one
+    device per shard executor, round-robin when shards outnumber
+    devices. The pmap lockstep path only uses the leading
+    ``min(n_shards, device_count)`` distinct devices; the round-robin
+    tail is for callers that drive shards individually."""
+    devs = jax.devices()
+    if n_shards is None:
+        n_shards = len(devs)
+    return [devs[i % len(devs)] for i in range(n_shards)]

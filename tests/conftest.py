@@ -2,9 +2,21 @@ import os
 import sys
 from pathlib import Path
 
+import pytest
+
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 if SRC not in sys.path:
     sys.path.insert(0, SRC)
+
+# Force a multi-device host platform BEFORE the first jax import so the
+# in-process suite (sharded scan engine, pmap lockstep) sees the same 8
+# simulated devices CPU CI and real multi-chip hosts do. Must run at
+# conftest import time: jax reads XLA_FLAGS once, at backend init. An
+# operator-provided device count (or an already-imported jax) wins —
+# devsim guards both, and imports nothing heavy.
+from repro.launch.devsim import force_host_devices  # noqa: E402
+
+force_host_devices(8)
 
 _TESTS = str(Path(__file__).resolve().parent)
 if _TESTS not in sys.path:
@@ -16,9 +28,21 @@ except ImportError:
     import _hypothesis_shim
     _hypothesis_shim.install()
 
-# NOTE: device count is intentionally NOT forced here — smoke tests run on
-# the single real CPU device. Multi-device tests spawn subprocesses with
-# their own XLA_FLAGS (see tests/_subproc.py).
+
+def pytest_collection_modifyitems(config, items):
+    """Auto-skip ``multidevice`` tests when the flag didn't take (jax was
+    already imported, or the operator forced a 1-device count) — the
+    suite then still runs everything that is exact on one device."""
+    multi = [it for it in items if "multidevice" in it.keywords]
+    if not multi:
+        return
+    import jax
+    if jax.device_count() > 1:
+        return
+    skip = pytest.mark.skip(reason="requires >1 JAX device "
+                            f"(have {jax.device_count()})")
+    for it in multi:
+        it.add_marker(skip)
 
 
 def run_subprocess_jax(code: str, devices: int = 8, timeout: int = 600):

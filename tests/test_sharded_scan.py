@@ -1,0 +1,297 @@
+"""Sharded scan engine (DESIGN.md §9): the differential oracle — sharded
+lockstep ≡ sharded serial ≡ single-shard ScanEngine ≡ naive_scan, for
+every shard count / partitioning strategy / backend — plus ShardPlan
+partition properties, store-merge semantics, and the invocation-counting
+regression proving the sharded path never evaluates a row twice and the
+merged store serves re-planned queries from cache."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.pipeline import build_scan_engine
+from repro.engine import ScanEngine, ShardedScanEngine, naive_scan
+from repro.engine.scan import VirtualColumnStore
+from repro.sharding.policy import ShardPlan, plan_shards
+from test_query_engine import _toy_cascade, _uint8_images
+
+
+@pytest.fixture(scope="module")
+def setup():
+    imgs = _uint8_images(210, 32, seed=4)
+    cascades = [
+        _toy_cascade("a", 1),
+        _toy_cascade("b", 2, [(0.25, 0.75), (0.3, 0.7), (None, None)]),
+        _toy_cascade("c", 3, [(0.2, 0.8), (0.35, 0.65), (None, None)]),
+    ]
+    metadata = {"cam": np.arange(len(imgs)) % 2,
+                "rare": (np.arange(len(imgs)) < 5).astype(np.int64)}
+    ref = naive_scan(imgs, cascades, metadata, {"cam": 0}, chunk=64)
+    single = ScanEngine(imgs, metadata, chunk=64)
+    sres = single.execute(cascades, {"cam": 0})
+    assert np.array_equal(sres.indices, ref) and len(ref) > 0
+    return imgs, cascades, metadata, ref, sres
+
+
+# ----------------------------------------------- differential oracle ------
+@pytest.mark.parametrize("shards", [1, 2, 3, 8])
+@pytest.mark.parametrize("strategy", ["range", "hash"])
+def test_sharded_differential_oracle(setup, shards, strategy):
+    """Bit-identical row sets vs the naive per-predicate full scans and
+    the single-shard engine, on both execution backends."""
+    imgs, cascades, metadata, ref, _ = setup
+    eng = ShardedScanEngine(imgs, metadata, shards=shards, chunk=64,
+                            strategy=strategy)
+    lock = eng.execute(cascades, {"cam": 0}, parallel=True)
+    assert np.array_equal(lock.indices, ref), (shards, strategy)
+    serial = ShardedScanEngine(imgs, metadata, shards=shards, chunk=64,
+                               strategy=strategy).execute(
+        cascades, {"cam": 0}, parallel=False)
+    assert np.array_equal(serial.indices, ref), (shards, strategy)
+    # the plan partitioned exactly the metadata survivors
+    lock.stats.plan.validate(np.where(metadata["cam"] == 0)[0])
+
+
+def test_shards_exceed_devices_and_uneven_partition(setup):
+    """16 shards > 8 forced devices: the lockstep runs shard groups at
+    device width; 210/16 is uneven; rows sets stay exact."""
+    imgs, cascades, metadata, ref, _ = setup
+    eng = ShardedScanEngine(imgs, metadata, shards=16, chunk=64)
+    res = eng.execute(cascades, {"cam": 0})
+    assert np.array_equal(res.indices, ref)
+    assert len(set(res.stats.plan.sizes)) > 1       # uneven by necessity
+
+
+def test_empty_shards_and_shards_exceeding_survivors(setup):
+    """5 surviving rows across 8 shards: some shards are empty, results
+    exact, empty shards do zero work."""
+    imgs, cascades, metadata, _, _ = setup
+    ref = naive_scan(imgs, cascades, metadata, {"rare": 1}, chunk=64)
+    eng = ShardedScanEngine(imgs, metadata, shards=8, chunk=64)
+    res = eng.execute(cascades, {"rare": 1})
+    assert np.array_equal(res.indices, ref)
+    assert 0 in res.stats.plan.sizes
+    for st, part in zip(res.stats.shards, res.stats.plan.shards):
+        if not len(part):
+            assert st.rows_evaluated == 0 and st.chunks == 0
+    # no survivors at all
+    none = eng.execute(cascades, {"cam": 99})
+    assert len(none.indices) == 0 and none.stats.rows_evaluated == 0
+
+
+def test_eager_backend_differential(setup):
+    imgs, cascades, metadata, ref, _ = setup
+    eng = ShardedScanEngine(imgs, metadata, shards=3, chunk=64, jit=False)
+    assert np.array_equal(eng.execute(cascades, {"cam": 0}).indices, ref)
+
+
+# ------------------------------------------------- ShardPlan properties ---
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 300), st.integers(1, 16),
+       st.sampled_from(["range", "hash"]), st.booleans(),
+       st.integers(0, 2 ** 31 - 1))
+def test_shard_plan_is_exact_partition(n_rows, n_shards, strategy,
+                                       weighted, seed):
+    """Every row assigned exactly once; shards cover the survivor set."""
+    rng = np.random.default_rng(seed)
+    ids = np.sort(rng.choice(1000, size=n_rows, replace=False))
+    weights = rng.uniform(0.0, 5.0, n_rows) if weighted else None
+    plan = plan_shards(ids, n_shards, strategy=strategy, weights=weights)
+    assert plan.n_shards == n_shards and len(plan.shards) == n_shards
+    cat = np.concatenate([s for s in plan.shards]) if n_shards else ids
+    assert len(cat) == n_rows                       # exactly once
+    assert np.array_equal(np.sort(cat), ids)        # full cover
+    for part in plan.shards:                        # sorted within shard
+        assert np.array_equal(part, np.sort(part))
+    plan.validate(ids)
+
+
+def test_shard_plan_skew_aware_rebalancing():
+    """Range partitioning splits on cumulative weight: a run of expensive
+    rows lands in a smaller shard, balancing estimated cost not counts."""
+    ids = np.arange(100)
+    weights = np.where(ids < 10, 100.0, 1.0)
+    plan = plan_shards(ids, 2, strategy="range", weights=weights)
+    assert len(plan.shards[0]) < len(plan.shards[1])
+    assert plan.balance < 1.2
+    uniform = plan_shards(ids, 2, strategy="range")
+    assert [len(s) for s in uniform.shards] == [50, 50]
+    # weights stay paired with their rows when ids arrive unsorted
+    perm = np.random.default_rng(0).permutation(100)
+    shuffled = plan_shards(ids[perm], 2, strategy="range",
+                           weights=weights[perm])
+    for a, b in zip(shuffled.shards, plan.shards):
+        assert np.array_equal(a, b)
+    assert shuffled.weights == pytest.approx(plan.weights)
+
+
+def test_shard_plan_hash_is_stable_and_rejects_bad_input():
+    ids = np.arange(64)
+    a = plan_shards(ids, 4, strategy="hash")
+    b = plan_shards(ids, 4, strategy="hash")
+    for x, y in zip(a.shards, b.shards):
+        assert np.array_equal(x, y)                 # stationary across calls
+    with pytest.raises(ValueError):
+        plan_shards(ids, 0)
+    with pytest.raises(ValueError):
+        plan_shards(ids, 2, strategy="modulo")
+
+
+# ------------------------------------------------ store merge semantics ---
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 200), st.integers(0, 2 ** 31 - 1))
+def test_store_merge_union_never_overwrites(n_rows, seed):
+    """Merged store == union of shard stores; a computed entry is never
+    overwritten by -1 or by the source."""
+    rng = np.random.default_rng(seed)
+    dst = VirtualColumnStore(n_rows)
+    src = VirtualColumnStore(n_rows)
+    key = ("concept", (0, 1, 2))
+    dst.column(key)[:] = rng.integers(-1, 2, n_rows)
+    src.column(key)[:] = rng.integers(-1, 2, n_rows)
+    src.column(("only-src", (9,)))[:] = rng.integers(-1, 2, n_rows)
+    before = dst.column(key).copy()
+    src_before = {k: src.column(k).copy() for k in src.keys()}
+    dst.merge_from(src)
+    computed = before >= 0
+    assert np.array_equal(dst.column(key)[computed], before[computed])
+    unknown = ~computed
+    assert np.array_equal(dst.column(key)[unknown],
+                          src.column(key)[unknown])
+    only = dst.column(("only-src", (9,)))
+    assert np.array_equal(only, src_before[("only-src", (9,))])
+    for k in src.keys():                            # source untouched
+        assert np.array_equal(src.column(k), src_before[k])
+
+
+def test_merged_store_equals_union_of_shard_work(setup):
+    """After a fresh sharded scan, the corpus-wide store holds exactly
+    one computed label per (cascade, evaluated row): known rows per
+    column == rows evaluated at that stage across shards (no duplicates,
+    nothing lost in the merge)."""
+    imgs, cascades, metadata, _, _ = setup
+    eng = ShardedScanEngine(imgs, metadata, shards=3, chunk=64)
+    res = eng.execute(cascades, {"cam": 0})
+    for casc, agg in zip(cascades, res.stats.stages):
+        assert eng.store.known_rows(casc.key) == agg.rows_evaluated
+        assert agg.rows_evaluated == agg.rows_in - agg.rows_cached
+
+
+# ------------------------------- invocation counting / cache regression ---
+def _counting_cascade(concept, seed, counters, thresholds=None):
+    casc = _toy_cascade(concept, seed, thresholds)
+    wrapped = []
+    for li, fn in enumerate(casc.model_fns):
+        def make(li, fn):
+            def f(x):
+                counters[concept][li] += 1
+                return fn(x)
+            return f
+        wrapped.append(make(li, fn))
+    casc.model_fns = wrapped
+    return casc
+
+
+def test_sharded_no_duplicate_evaluations_and_cache_hits(setup):
+    """The PR-2 executor-invocation-counting pattern, sharded: per-stage
+    evaluated rows match the single-shard engine exactly (each surviving
+    row evaluated once, on one shard), a same-order re-run invokes the
+    models ZERO times, and a re-planned (reversed) query is served
+    partially from the merged store."""
+    imgs, _, metadata, ref, sres = setup
+    counters = {c: [0, 0, 0] for c in "abc"}
+    cascades = [
+        _counting_cascade("a", 1, counters),
+        _counting_cascade("b", 2, counters,
+                          [(0.25, 0.75), (0.3, 0.7), (None, None)]),
+        _counting_cascade("c", 3, counters,
+                          [(0.2, 0.8), (0.35, 0.65), (None, None)]),
+    ]
+    eng = ShardedScanEngine(imgs, metadata, shards=3, chunk=64, jit=False)
+    res = eng.execute(cascades, {"cam": 0})
+    assert np.array_equal(res.indices, ref)
+    # per-stage totals identical to the single-shard engine: a row is
+    # evaluated exactly once, on exactly one shard
+    for agg, st_single in zip(res.stats.stages, sres.stats.stages):
+        assert agg.rows_evaluated == st_single.rows_evaluated
+        assert agg.rows_in == st_single.rows_in
+    calls_after_first = {c: list(v) for c, v in counters.items()}
+    assert all(v[0] > 0 for v in calls_after_first.values())
+
+    # identical re-run: answered entirely by the merged store — the
+    # models are never invoked
+    again = eng.execute(cascades, {"cam": 0})
+    assert np.array_equal(again.indices, ref)
+    assert again.stats.rows_evaluated == 0
+    assert counters == calls_after_first
+    assert all(st.rows_cached == st.rows_in for st in again.stats.stages)
+
+    # re-planned (reversed) query on a DIFFERENT shard count: merged
+    # store serves every previously-decided row; only the complement of
+    # rows that earlier predicates had eliminated is evaluated
+    eng2 = ShardedScanEngine(imgs, metadata, shards=8, chunk=64,
+                             jit=False)
+    eng2.store.merge_from(eng.store)
+    rres = eng2.execute(cascades[::-1], {"cam": 0})
+    assert np.array_equal(rres.indices, ref)
+    assert sum(st.rows_cached for st in rres.stats.stages) > 0
+    assert rres.stats.rows_evaluated < res.stats.rows_evaluated
+
+
+# --------------------------------------------------- planner + factory ----
+def test_explain_reports_shard_layout(setup):
+    from repro.engine.planner import PhysicalPlan, PlannedPredicate
+    from repro.core.selector import Selection
+
+    imgs, cascades, metadata, _, _ = setup
+    eng = ShardedScanEngine(imgs, metadata, shards=4, chunk=64)
+    shard_plan = eng.plan_for(cascades, {"cam": 0})
+    plan = PhysicalPlan("CAMERA", {"cam": 0}, [
+        PlannedPredicate(c, Selection(0, 0.9, 100.0), "toy", 0.1)
+        for c in cascades])
+    txt = plan.explain(n_rows=len(imgs), shard_plan=shard_plan)
+    assert "sharding: 4 shards (range)" in txt
+    for i in range(4):
+        assert f"shard {i}:" in txt
+    assert "balance=" in txt
+
+
+def test_build_scan_engine_factory(setup):
+    imgs, cascades, metadata, ref, _ = setup
+    assert isinstance(build_scan_engine(imgs, metadata), ScanEngine)
+    sharded = build_scan_engine(imgs, metadata, shards=2, chunk=64)
+    assert isinstance(sharded, ShardedScanEngine)
+    assert np.array_equal(sharded.execute(cascades, {"cam": 0}).indices,
+                          ref)
+    one = build_scan_engine(imgs, metadata, shards=1, chunk=64)
+    assert isinstance(one, ShardedScanEngine)       # scaling-curve baseline
+
+
+# ---------------------------------------------------------- multidevice ---
+@pytest.mark.multidevice
+def test_lockstep_spreads_over_distinct_devices(setup):
+    """With the conftest-forced 8 host devices, the lockstep runs one
+    shard per device (distinct devices, width > 1) and stays exact."""
+    import jax
+
+    from repro.launch.mesh import host_device_count, shard_devices
+
+    assert host_device_count() == jax.device_count() > 1
+    n = host_device_count()
+    devs = shard_devices(n)
+    assert len(set(devs)) == n
+    imgs, cascades, metadata, ref, _ = setup
+    eng = ShardedScanEngine(imgs, metadata, shards=n, chunk=64)
+    res = eng.execute(cascades, {"cam": 0})
+    assert np.array_equal(res.indices, ref)
+    assert res.stats.n_devices == n
+    assert res.stats.backend == "lockstep" and res.stats.supersteps > 0
+
+
+@pytest.mark.multidevice
+def test_round_robin_when_shards_exceed_devices():
+    from repro.launch.mesh import host_device_count, shard_devices
+    n = host_device_count()
+    devs = shard_devices(n + 3)
+    assert len(devs) == n + 3
+    assert devs[n] == devs[0] and devs[n + 1] == devs[1]
