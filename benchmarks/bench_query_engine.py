@@ -45,8 +45,17 @@ from repro.data.synthetic import (DEFAULT_PREDICATES, make_corpus,  # noqa: E402
 from repro.engine import (PredicateClause, QuerySpec, ScanEngine,  # noqa: E402
                           ShardedScanEngine, naive_scan, plan_query)
 
-OUT = Path(__file__).resolve().parents[1] / "BENCH_query_engine.json"
-OUT_SHARDED = Path(__file__).resolve().parents[1] / "BENCH_sharded_scan.json"
+ROOT = Path(__file__).resolve().parents[1]
+OUT = ROOT / "BENCH_query_engine.json"
+OUT_SHARDED = ROOT / "BENCH_sharded_scan.json"
+# --quick is a CI smoke: compile-dominated numbers land under artifacts/,
+# never clobbering the repo-root headline artifacts
+QUICK_DIR = ROOT / "artifacts" / "bench"
+
+
+def _quick_path(out: Path) -> Path:
+    QUICK_DIR.mkdir(parents=True, exist_ok=True)
+    return QUICK_DIR / out.with_suffix(".quick.json").name
 
 
 def build_systems(specs, *, steps: int, n_train: int, hw: int, log=print):
@@ -307,8 +316,7 @@ def main() -> None:
         report = bench_sharded(systems, specs,
                                sizes[-1], shard_counts,
                                chunk=chunk, scenario="CAMERA")
-        out = (OUT_SHARDED.with_suffix(".quick.json") if args.quick
-               else OUT_SHARDED)
+        out = _quick_path(OUT_SHARDED) if args.quick else OUT_SHARDED
         out.write_text(json.dumps(report, indent=2) + "\n")
         print(f"wrote {out}  (throughput scaling "
               f"{report['throughput_scaling_x']}x at "
@@ -327,8 +335,7 @@ def main() -> None:
                                   for c in report["corpora"])
     report["all_identical"] = all(c["identical_row_sets"]
                                   for c in report["corpora"])
-    # --quick is a CI smoke: compile-dominated, never clobber the artifact
-    out = OUT.with_suffix(".quick.json") if args.quick else OUT
+    out = _quick_path(OUT) if args.quick else OUT
     out.write_text(json.dumps(report, indent=2) + "\n")
     print(f"wrote {out}")
 

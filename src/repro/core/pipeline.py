@@ -246,17 +246,54 @@ def initialize_system(train_split, config_split, eval_split,
 
 def build_scan_engine(images, metadata=None, *, shards: int | None = None,
                       chunk: int = 64, jit: bool = True,
-                      strategy: str = "range"):
+                      strategy: str = "range", repcache=None):
     """System-level scan-executor factory (the ``--shards N`` path in
     examples/ and benchmarks/): ``shards=None``/0 builds the single-host
     ScanEngine; any explicit shard count (including 1, for scaling-curve
     baselines) builds the sharded engine (DESIGN.md §9). Both share the
     same execute(cascades, metadata_eq) surface and virtual-column
-    semantics."""
+    semantics. ``repcache`` (serial engine only) plugs a cross-query
+    representation cache into per-chunk pyramid materialization
+    (DESIGN.md §10.3)."""
     from repro.engine.scan import ScanEngine
     from repro.engine.sharded import ShardedScanEngine
 
     if shards:
         return ShardedScanEngine(images, metadata, shards=int(shards),
                                  chunk=chunk, jit=jit, strategy=strategy)
-    return ScanEngine(images, metadata, chunk=chunk, jit=jit)
+    return ScanEngine(images, metadata, chunk=chunk, jit=jit,
+                      repcache=repcache)
+
+
+def build_cascade_service(images, cascades, *, mode: str = "async",
+                          shards: int | None = None, batch_size: int = 32,
+                          max_wait_s: float = 0.005, clock=None,
+                          repcache_bytes: int | None = 64 << 20,
+                          repcache=None, store=None, jit: bool = True):
+    """System-level serving factory (DESIGN.md §10): ``mode='async'``
+    builds the shard-aware AsyncCascadeService (deadline scheduler,
+    per-shard device queues, cross-query representation cache — a fresh
+    ``repcache_bytes``-budget cache unless the caller shares one via
+    ``repcache``, e.g. the same object backing a ScanEngine);
+    ``mode='sync'`` builds the legacy synchronous-polling
+    CascadeService from the same {concept -> CompiledCascade} table.
+    ``store`` shares a scan engine's virtual columns with the service so
+    previously scanned rows are served with zero model invocations."""
+    import time
+
+    from repro.serve.batcher import CascadeService
+    from repro.serve.repcache import RepresentationCache
+    from repro.serve.service import AsyncCascadeService
+
+    clock = clock or time.perf_counter
+    if mode == "sync":
+        return CascadeService.from_cascades(cascades, batch_size,
+                                            max_wait_s, clock, jit=jit)
+    if mode != "async":
+        raise ValueError(f"unknown serving mode {mode!r}")
+    if repcache is None and repcache_bytes:
+        repcache = RepresentationCache(repcache_bytes)
+    return AsyncCascadeService(images, cascades, shards=shards,
+                               batch_size=batch_size,
+                               max_wait_s=max_wait_s, clock=clock,
+                               repcache=repcache, store=store, jit=jit)

@@ -112,6 +112,21 @@ class VirtualColumnStore:
             fill = (dst < 0) & (src >= 0)
             dst[fill] = src[fill]
 
+    def merge_rows_from(self, other: "VirtualColumnStore", rows) -> None:
+        """``merge_from`` restricted to ``rows``: identical union /
+        never-overwrite semantics at O(len(rows)) per column instead of
+        O(corpus) — the serving path's per-delivery commit (a flush
+        touches batch-sized row sets, and a full-store sweep per
+        delivery would scale with corpus size)."""
+        assert other.n_rows == self.n_rows
+        rows = np.asarray(rows, np.int64)
+        for key in other.keys():
+            src = other.column(key)[rows]
+            dst = self.column(key)
+            take = (dst[rows] < 0) & (src >= 0)
+            if take.any():
+                dst[rows[take]] = src[take]
+
 
 def stage_needs(cascades: Sequence[CompiledCascade],
                 base_hw: int) -> tuple[list, tuple]:
@@ -143,6 +158,9 @@ class StageStats:
 class ScanStats:
     chunks: int = 0           # ingest chunks == shared pyramids built
     rows_scanned: int = 0     # rows surviving metadata (pyramid rows)
+    rep_rows_cached: int = 0  # rows whose pooled levels came from the
+    #                           cross-query representation cache (no
+    #                           per-chunk pyramid materialization)
     stages: list = field(default_factory=list)
 
     @property
@@ -174,12 +192,23 @@ class ScanEngine:
     re-planned queries amortize both compilation and inference."""
 
     def __init__(self, images, metadata: Mapping[str, np.ndarray]
-                 | None = None, *, chunk: int = 64, jit: bool = True):
+                 | None = None, *, chunk: int = 64, jit: bool = True,
+                 repcache=None):
         self.images = np.asarray(images, np.float32)
         self.metadata = dict(metadata or {})
         self.chunk = int(chunk)
         self.jit = jit
         self.store = VirtualColumnStore(len(self.images))
+        # optional cross-query representation cache
+        # (serve/repcache.RepresentationCache): chunks whose non-base
+        # pooled levels are all cached skip pyramid materialization
+        # entirely, and freshly pooled levels are published for later
+        # queries / the serving path. Bit-exact either way (dyadic
+        # box-filter pooling is deterministic).
+        self.repcache = repcache
+        if repcache is not None:
+            from repro.serve.repcache import corpus_token
+            repcache.bind_corpus(corpus_token(self.images))
         self._pyr_fns: dict = {}
         self._casc_fns: dict = {}
 
@@ -313,15 +342,33 @@ class ScanEngine:
                                          for r, v in down.items()})
 
         stats.rows_scanned = len(ids_all)
+        base_hw = self.images.shape[1]
+        small = [r for r in needed[0] if r != base_hw]
         for lo in range(0, len(ids_all), self.chunk):
             sel = ids_all[lo:lo + self.chunk]
-            imgs = self.images[sel]
-            if len(sel) < self.chunk:     # static-shape pad (one compile)
-                pad = np.repeat(imgs[-1:], self.chunk - len(sel), axis=0)
-                imgs = np.concatenate([imgs, pad])
-            levels = pyr_fn(jnp.asarray(imgs))
-            rows = {r: np.asarray(levels[r])[:len(sel)] for r in needed[0]}
-            stats.chunks += 1
+            cached = (self.repcache.lookup_rows(sel, small)
+                      if self.repcache is not None and small else None)
+            if cached is not None:
+                # every non-base level of every chunk row is cached:
+                # skip the pyramid entirely (the base level, when some
+                # cascade reads it, is the raw image row itself)
+                rows = cached
+                if base_hw in needed[0]:
+                    rows[base_hw] = self.images[sel]
+                stats.rep_rows_cached += len(sel)
+            else:
+                imgs = self.images[sel]
+                if len(sel) < self.chunk:  # static-shape pad (one compile)
+                    pad = np.repeat(imgs[-1:], self.chunk - len(sel),
+                                    axis=0)
+                    imgs = np.concatenate([imgs, pad])
+                levels = pyr_fn(jnp.asarray(imgs))
+                rows = {r: np.asarray(levels[r])[:len(sel)]
+                        for r in needed[0]}
+                stats.chunks += 1
+                if self.repcache is not None:
+                    for r in small:
+                        self.repcache.put_rows(sel, r, rows[r])
             route(0, sel, rows)
         for s in range(k):                # drain partial buffers in order
             flush(s)

@@ -56,6 +56,34 @@ from repro.engine.scan import (CompiledCascade, ScanEngine, ScanStats,
 from repro.sharding.policy import ShardPlan, plan_shards
 
 
+# ---------------------------------------------------------- slab builder --
+SLAB_FLOOR = 16
+
+
+def slab_width(n_valid: int, cap: int, floor: int = SLAB_FLOOR) -> int:
+    """Bucketed slab width: smallest power-of-two >= ``n_valid``,
+    floored at ``floor`` and capped at ``cap``. Keeps sparse batches
+    (late-stage lockstep slabs, deadline-triggered partial serving
+    flushes) from paying full-width padding compute while bounding the
+    number of distinct compiled shapes to O(log cap). Labels are
+    width-independent (per-row independence, DESIGN.md §4.2), so the
+    bucket size is purely a perf knob. Shared by the lockstep supersteps
+    here and the async service's batch assembler (serve/service.py)."""
+    b = floor
+    while b < n_valid:
+        b *= 2
+    return min(b, cap)
+
+
+def pad_rows(ids: np.ndarray, width: int) -> np.ndarray:
+    """Pad a valid id prefix to the slab width by repeating the last id
+    (the lockstep/serving padding policy: stale duplicate rows are
+    computed and discarded, never recorded). Requires 0 < len <= width."""
+    ids = np.asarray(ids, np.int64)
+    return np.concatenate([ids, np.full(width - len(ids), ids[-1],
+                                        np.int64)])
+
+
 @dataclass
 class ShardedScanStats:
     plan: ShardPlan
@@ -299,17 +327,8 @@ class ShardedScanEngine:
                                  make)
 
     def _slab_width(self, n_valid: int, cap: int | None = None) -> int:
-        """Bucketed slab width: smallest power-of-two >= the widest
-        shard's valid rows, capped at ``chunk`` (or ``cap``). Keeps
-        late-stage slabs (few survivors per shard) from paying
-        chunk-wide padding compute — labels are width-independent
-        (per-row independence; the seed chunk-size invariance test), so
-        this is purely a perf knob with a bounded compile-cache
-        footprint."""
-        b = 16
-        while b < n_valid:
-            b *= 2
-        return min(b, self.chunk if cap is None else cap)
+        """Module-level ``slab_width`` bound to this engine's chunk."""
+        return slab_width(n_valid, self.chunk if cap is None else cap)
 
     def _stage_blocks(self, lanes: list, width: int, base_hw: int):
         """Pad each lane's undetermined rows to a common chunk-multiple

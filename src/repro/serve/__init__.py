@@ -1,0 +1,15 @@
+"""Serving layer: the sync size-or-deadline batcher (batcher.py), the
+shard-aware async service (service.py, DESIGN.md §10) with its deadline
+scheduler (scheduler.py) and cross-query representation cache
+(repcache.py), plus LM-serving pieces (continuous batching, KV cache,
+speculative decoding)."""
+from repro.serve.batcher import Batcher, BatcherStats, CascadeService, Request
+from repro.serve.repcache import RepresentationCache
+from repro.serve.scheduler import DeadlineWheel, ManualClock
+from repro.serve.service import AsyncCascadeService, ServiceStats
+
+__all__ = [
+    "AsyncCascadeService", "Batcher", "BatcherStats", "CascadeService",
+    "DeadlineWheel", "ManualClock", "RepresentationCache", "Request",
+    "ServiceStats",
+]

@@ -72,24 +72,61 @@ class Batcher:
 
 
 class CascadeService:
-    """Multi-predicate serving front: one Batcher per concept, all
+    """Multi-predicate serving front: one Batcher per predicate, all
     sharing the caller's runner table ({concept -> run_batch}, e.g.
     jitted cascade executors from engine/scan.make_batch_runner).
     ``submit`` routes a request to its predicate's batch; poll/drain fan
-    out to every batcher so deadlines hold across concepts."""
+    out to every batcher so deadlines hold across concepts.
+
+    Batchers are keyed END-TO-END by ``(concept, cascade-id)``, never by
+    cascade id alone: physical cascade ids (the planner's grid
+    coordinates, pipeline.compiled_cascade) are concept-independent, so
+    two predicates routinely select the SAME id. A cascade-id-keyed
+    dedupe would merge both concepts into one batch queue, interleaving
+    their results and dropping per-request arrival order per concept —
+    ``from_cascades`` instead dedupes only the COMPILED RUNNER, and only
+    for a genuinely shared CompiledCascade object, while keeping queues,
+    order, and stats per (concept, cascade-id)
+    (tests/test_serve_async.py regression)."""
 
     def __init__(self, runners: Mapping[str, Callable[[list], list]],
                  batch_size: int, max_wait_s: float = 0.01,
-                 clock=time.perf_counter):
-        self.batchers = {c: Batcher(fn, batch_size, max_wait_s, clock)
+                 clock=time.perf_counter,
+                 cascade_ids: Mapping[str, tuple] | None = None):
+        self._key_of = {c: (c, tuple((cascade_ids or {}).get(c, ())))
+                        for c in runners}
+        self.batchers = {self._key_of[c]: Batcher(fn, batch_size,
+                                                  max_wait_s, clock)
                          for c, fn in runners.items()}
+
+    @classmethod
+    def from_cascades(cls, cascades: Mapping[str, "object"],
+                      batch_size: int, max_wait_s: float = 0.01,
+                      clock=time.perf_counter, jit: bool = True):
+        """Build from {concept -> CompiledCascade}: one batcher per
+        (concept, cascade-id). The compiled runner is shared only when
+        two concepts hand in the SAME CompiledCascade object — a bare
+        cascade-id match is NOT sufficient to share models (grid
+        coordinates repeat across concepts with different params)."""
+        from repro.engine.scan import make_batch_runner
+
+        compiled: dict[int, Callable] = {}
+        runners, ids = {}, {}
+        for concept, casc in cascades.items():
+            if id(casc) not in compiled:
+                compiled[id(casc)] = make_batch_runner(casc, batch_size,
+                                                       jit=jit)
+            runners[concept] = compiled[id(casc)]
+            ids[concept] = tuple(casc.cascade_id)
+        return cls(runners, batch_size, max_wait_s, clock,
+                   cascade_ids=ids)
 
     @property
     def concepts(self):
-        return list(self.batchers)
+        return list(self._key_of)
 
     def submit(self, concept: str, req: Request):
-        self.batchers[concept].submit(req)
+        self.batchers[self._key_of[concept]].submit(req)
 
     def poll(self):
         for b in self.batchers.values():
@@ -101,7 +138,8 @@ class CascadeService:
 
     @property
     def stats(self) -> dict[str, BatcherStats]:
-        return {c: b.stats for c, b in self.batchers.items()}
+        return {c: self.batchers[k].stats
+                for c, k in self._key_of.items()}
 
     def latencies(self) -> list:
         out = []

@@ -1,0 +1,155 @@
+"""Cross-query representation cache (DESIGN.md §10.3, ROADMAP item).
+
+The scan engine materializes the shared RGB pyramid per chunk per query
+and the serving path re-pools every request batch from the raw base
+images — in an interactive session (the paper's ONGOING scenario) the
+same hot rows are pooled again and again. ``RepresentationCache`` is an
+LRU over ``(row, resolution) -> pooled RGB level row`` with a byte
+budget, shared across queries AND requests: one object can back a
+``ScanEngine`` (per-chunk pyramid hook) and an ``AsyncCascadeService``
+(per-flush batch assembly) simultaneously, so an offline scan warms the
+online path and vice versa.
+
+Exactness: an entry is the deterministic progressive box-filter pooling
+of the row's base image (core/transforms.materialize_pyramid), so a
+cache hit is bit-identical to recomputation in the dyadic-pixel regime
+every corpus in this repo uses — reuse changes bytes moved, never
+labels. Entries are stored pre-color-transform (RGB), the same shared
+level every color representation projects from, so concepts with
+different color reps share entries.
+
+Accounting is all-or-none per lookup: ``lookup_rows`` returns stacked
+blocks only when EVERY (row, level) entry is present — the batch then
+skips pooling entirely — and counts hits/misses at entry granularity.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import numpy as np
+
+
+def corpus_token(images) -> tuple:
+    """Cheap deterministic corpus fingerprint: shape plus a strided
+    sample checksum. The same pixel data in a different buffer (engines
+    copy on construction) maps to the same token; two different corpora
+    virtually never collide."""
+    arr = np.asarray(images)
+    step = max(1, len(arr) // 17)
+    return tuple(arr.shape) + (float(np.float64(arr[::step].sum())),)
+
+
+class RepresentationCache:
+    """Byte-budgeted LRU of pooled pyramid level rows keyed by
+    ``(row, resolution)``. Arrays are copied on insert (a cached level
+    must not pin the flush-sized block it was sliced from) and returned
+    by reference (callers stack them into fresh batch tensors).
+
+    Keys carry no corpus identity, so every consumer binds its corpus
+    fingerprint on attach (``bind_corpus``): sharing one cache between
+    a scan engine and a service over the SAME corpus is the designed
+    use; attaching a second, different corpus raises instead of
+    silently serving another corpus's pixels (whose labels would then
+    be committed as virtual columns permanently)."""
+
+    def __init__(self, budget_bytes: int = 64 << 20):
+        if budget_bytes <= 0:
+            raise ValueError("budget_bytes must be positive")
+        self.budget_bytes = int(budget_bytes)
+        self.nbytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.inserts = 0
+        self._od: OrderedDict[tuple, np.ndarray] = OrderedDict()
+        self._corpus: tuple | None = None
+
+    def bind_corpus(self, token: tuple) -> None:
+        """First binder wins; a different corpus raises ValueError."""
+        if self._corpus is None:
+            self._corpus = token
+        elif self._corpus != token:
+            raise ValueError(
+                "RepresentationCache is already bound to a different "
+                "corpus — its (row, resolution) keys would collide; "
+                "use one cache per corpus")
+
+    def __len__(self) -> int:
+        return len(self._od)
+
+    def __contains__(self, key: tuple) -> bool:
+        return key in self._od
+
+    # ------------------------------------------------------ single entry --
+    def get(self, row: int, resolution: int):
+        """The level row, or None. A hit refreshes LRU recency."""
+        key = (int(row), int(resolution))
+        arr = self._od.get(key)
+        if arr is None:
+            self.misses += 1
+            return None
+        self._od.move_to_end(key)
+        self.hits += 1
+        return arr
+
+    def put(self, row: int, resolution: int, level) -> None:
+        key = (int(row), int(resolution))
+        arr = np.array(level, np.float32)   # own copy, never a view
+        if arr.nbytes > self.budget_bytes:
+            return                           # would evict everything for one row
+        old = self._od.pop(key, None)
+        if old is not None:
+            self.nbytes -= old.nbytes
+        self._od[key] = arr
+        self.nbytes += arr.nbytes
+        self.inserts += 1
+        while self.nbytes > self.budget_bytes:
+            _, victim = self._od.popitem(last=False)
+            self.nbytes -= victim.nbytes
+            self.evictions += 1
+
+    # ------------------------------------------------------- batch entry --
+    def lookup_rows(self, ids, resolutions) -> dict | None:
+        """All-or-none batch lookup: ``{resolution: (len(ids), r, r, 3)}``
+        stacked blocks when every (row, level) entry is cached, else
+        None. Counters move at (row, level) granularity, and a failed
+        lookup serves NOTHING — every probed entry of a failed batch
+        counts as a miss, so ``hit_rate`` is exactly the fraction of
+        entry lookups actually served from cache."""
+        ids = np.asarray(ids, np.int64)
+        resolutions = [int(r) for r in resolutions]
+        if any((int(i), r) not in self._od
+               for r in resolutions for i in ids):
+            self.misses += len(ids) * len(resolutions)
+            return None
+        out = {}
+        for r in resolutions:
+            rows = [self.get(int(i), r) for i in ids]
+            out[r] = (np.stack(rows) if rows
+                      else np.empty((0, r, r, 3), np.float32))
+        return out
+
+    def put_rows(self, ids, resolution: int, block) -> None:
+        """Insert one pooled level for a batch of rows; ``block`` is
+        ``(len(ids), r, r, 3)`` (each row copied out of the block)."""
+        block = np.asarray(block)
+        for i, row in enumerate(np.asarray(ids, np.int64)):
+            self.put(int(row), resolution, block[i])
+
+    # ------------------------------------------------------------- stats --
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def stats(self) -> dict:
+        return {
+            "entries": len(self._od),
+            "bytes": int(self.nbytes),
+            "budget_bytes": self.budget_bytes,
+            "hits": int(self.hits),
+            "misses": int(self.misses),
+            "hit_rate": round(self.hit_rate, 4),
+            "inserts": int(self.inserts),
+            "evictions": int(self.evictions),
+        }

@@ -1,0 +1,396 @@
+"""Shard-aware async cascade serving (DESIGN.md §10).
+
+``AsyncCascadeService`` replaces the synchronous-polling
+``CascadeService`` (serve/batcher.py) for request streams over a
+resident corpus ("does frame ROW contain CONCEPT?"):
+
+* **shard routing** — requests are routed by the ShardPlan's stationary
+  hash partitioning (`sharding/policy.shard_route`) to one queue PER
+  SHARD DEVICE. A row's shard owns its virtual columns (the same
+  ownership the sharded scan engine uses), so the store lookup on
+  submit is a shard-local read, and an offline hash-sharded scan leaves
+  its labels exactly where the serving path will look for them.
+* **deadline scheduling** — a deadline wheel (serve/scheduler.py) holds
+  one entry per non-empty (shard, concept) queue group; a group flushes
+  when ``batch_size`` requests are waiting OR when its oldest request's
+  deadline (``arrival + max_wait_s``) comes due on ``poll()``. Flushed
+  batches are assembled with the lockstep's bucketed power-of-2 slab
+  builder (`engine/sharded.slab_width`/`pad_rows`), so a
+  deadline-triggered partial flush pays bucket-width compute, not the
+  sync batcher's full pad-to-capacity.
+* **dispatch-ahead** — one in-flight batch per device:
+  ``block_until_ready`` is deferred to result delivery, so host-side
+  routing and gather of the next batch overlap the device compute of
+  the previous one. Exactness is untouched: deferral changes WHEN a
+  label array is read, never its value, and per-device delivery is FIFO
+  (a device's in-flight batch is delivered before it accepts the next),
+  so evaluated results are delivered in submission order per queue.
+* **post-flush commit** — labels are recorded into the shard-local
+  store and committed corpus-wide via ``VirtualColumnStore.merge_from``
+  (the sharded scan's merge semantics: computed labels never
+  overwritten). A re-submitted decided row is answered on submit with
+  ZERO model invocations.
+* **representation reuse** — an optional cross-query
+  ``RepresentationCache`` (serve/repcache.py) backs batch assembly:
+  when every row of a flush already has every non-base pooled level
+  cached, the batch runs the from-pyramid variant (no re-pooling);
+  otherwise the from-base variant runs and publishes its freshly pooled
+  levels. The same cache object can back a ``ScanEngine``, so offline
+  scans warm the online path.
+
+Exactness: batches run full-width cascade levels
+(``caps = [width] * (L-1)``), deliberately ignoring
+``CompiledCascade.capacities`` exactly like the scan paths — labels are
+per-row independent of batch packing, hence bit-identical to
+``ScanEngine``/``naive_scan`` and safe to commit as virtual columns
+(the sync batcher's capped-overflow trick trades that exactness for
+bounded tail compute; see CompiledCascade).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.engine.scan import CompiledCascade, VirtualColumnStore
+from repro.engine.sharded import pad_rows, slab_width
+from repro.serve.batcher import Request
+from repro.serve.scheduler import DeadlineWheel
+from repro.sharding.policy import shard_route
+
+
+@dataclass
+class ServiceStats:
+    """Per-concept serving counters."""
+    requests: int = 0
+    store_hits: int = 0        # answered on submit, zero invocations
+    rep_hit_rows: int = 0      # rows assembled from the repcache
+    rows_evaluated: int = 0
+    batches: int = 0
+    padded_slots: int = 0
+    size_flushes: int = 0
+    deadline_flushes: int = 0
+    drain_flushes: int = 0
+    # bounded window (newest first out the back) so a resident service
+    # can't grow a float per request forever
+    latencies: deque = field(
+        default_factory=lambda: deque(maxlen=65536))
+
+
+@dataclass
+class _InFlight:
+    """A dispatched, not-yet-delivered batch parked on its device."""
+    shard: int
+    concept: str
+    take: list                 # the batch's Requests (arrival order)
+    rows: np.ndarray           # their row ids (unpadded)
+    labels: object             # device array; forced at delivery
+    levels: dict | None        # device arrays for the repcache, or None
+
+
+class AsyncCascadeService:
+    """Deadline-scheduled, shard-routed serving over a resident corpus.
+
+    ``submit(concept, Request(rid, row_id))`` answers immediately from
+    the row's shard-local virtual columns when the label is known;
+    otherwise the request joins its (shard, concept) queue. ``poll()``
+    fires due deadlines and harvests finished batches; ``drain()``
+    flushes and delivers everything. Results land on ``Request.result``
+    exactly like the sync service."""
+
+    def __init__(self, images, cascades: Mapping[str, CompiledCascade],
+                 *, shards: int | None = None, batch_size: int = 32,
+                 max_wait_s: float = 0.005, clock=time.perf_counter,
+                 repcache=None, store: VirtualColumnStore | None = None,
+                 jit: bool = True, devices: Sequence | None = None,
+                 fn_cache: dict | None = None):
+        from repro.launch.mesh import shard_devices
+
+        self.images = np.asarray(images, np.float32)
+        self.cascades = dict(cascades)
+        self.devices = list(devices) if devices is not None \
+            else shard_devices(shards)
+        self.n_shards = int(shards) if shards is not None \
+            else len(self.devices)
+        if self.n_shards < 1:
+            raise ValueError("need at least one shard")
+        self.batch_size = int(batch_size)
+        self.max_wait_s = float(max_wait_s)
+        self.clock = clock
+        self.jit = jit
+        self.repcache = repcache
+        if repcache is not None:
+            from repro.serve.repcache import corpus_token
+            repcache.bind_corpus(corpus_token(self.images))
+        self.wheel = DeadlineWheel(granularity=max(self.max_wait_s / 4,
+                                                   1e-6))
+
+        # corpus-wide store (shared with the caller when given, so a
+        # scan engine's virtual columns serve requests directly) plus
+        # shard-local stores seeded with each shard's own partition —
+        # all a shard's queue will ever look up
+        self.store = store if store is not None \
+            else VirtualColumnStore(len(self.images))
+        self._row_shard = shard_route(np.arange(len(self.images)),
+                                      self.n_shards)
+        self._shard_stores = []
+        for s in range(self.n_shards):
+            st = VirtualColumnStore(len(self.images))
+            st.seed_from(self.store, np.where(self._row_shard == s)[0])
+            self._shard_stores.append(st)
+
+        self._queues: list[dict[str, list]] = [
+            {} for _ in range(self.n_shards)]
+        self._inflight: dict = {}          # device -> _InFlight
+        # (concept, width, variant) -> compiled runner; pass a shared
+        # dict (naive_scan's _fn_cache idiom) so fresh-state benchmark
+        # services don't re-pay jit compilation
+        self._fns: dict = fn_cache if fn_cache is not None else {}
+        self.stats = {c: ServiceStats() for c in self.cascades}
+        # rids in delivery order — an observability window (FIFO tests,
+        # debugging), bounded so a long-lived service can't leak
+        self.delivered: deque = deque(maxlen=65536)
+
+    # ---------------------------------------------------------- plumbing --
+    @property
+    def concepts(self) -> list[str]:
+        return list(self.cascades)
+
+    def shard_of(self, row: int) -> int:
+        return int(self._row_shard[int(row)])
+
+    def _commit(self, x, dev):
+        if not self.jit:
+            return np.asarray(x)
+        import jax
+        return jax.device_put(np.asarray(x), dev)
+
+    def _fn(self, concept: str, width: int, variant: str):
+        """Compiled batch runner, cached per (cascade key, slab width,
+        variant) — the cascade's (concept, cascade-id) key, not the
+        bare concept, so a shared fn_cache can never serve a retrained
+        cascade's labels from a stale compile (same reason naive_scan's
+        _fn_cache keys by casc.key). 'base': raw rows in, labels +
+        freshly pooled non-base levels out. 'pyr': cached pooled levels
+        in, labels out."""
+        key = (self.cascades[concept].key, width, variant)
+        if key not in self._fns:
+            from repro.core.executor import run_cascade_on_pyramid
+            from repro.core.transforms import materialize_pyramid
+
+            casc = self.cascades[concept]
+            res = tuple(casc.resolutions)
+            base_hw = self.images.shape[1]
+            small = tuple(r for r in res if r != base_hw)
+            caps = [width] * (len(casc.model_fns) - 1)
+
+            if variant == "base":
+                def fn(imgs):
+                    pyr = materialize_pyramid(imgs, res)
+                    labels = run_cascade_on_pyramid(
+                        {r: pyr[r] for r in res}, casc.model_fns,
+                        casc.thresholds, casc.reps, caps)[0]
+                    return labels, {r: pyr[r] for r in small}
+            else:
+                def fn(pyr):
+                    return run_cascade_on_pyramid(
+                        pyr, casc.model_fns, casc.thresholds, casc.reps,
+                        caps)[0]
+            if self.jit:
+                import jax
+                fn = jax.jit(fn)
+            self._fns[key] = fn
+        return self._fns[key]
+
+    def warmup(self, widths: Sequence[int] | None = None) -> int:
+        """Pre-compile AND execute one dummy batch per (device, concept,
+        slab width, variant) so live traffic never hits a compile
+        stall — serving cold-start elimination. Default widths: every
+        bucket ``slab_width`` can emit for this batch_size. Dummy
+        batches never touch the stores or the repcache. Returns the
+        number of executables exercised."""
+        if widths is None:
+            widths = sorted({slab_width(n, self.batch_size)
+                             for n in range(1, self.batch_size + 1)})
+        base_hw = self.images.shape[1]
+        rows = np.zeros(max(widths), np.int64)
+        n = 0
+        for concept, casc in self.cascades.items():
+            small = [r for r in casc.resolutions if r != base_hw]
+            for width in widths:
+                imgs = self.images[rows[:width]]
+                for dev in dict.fromkeys(self.devices):
+                    lab, _ = self._fn(concept, width, "base")(
+                        self._commit(imgs, dev))
+                    np.asarray(lab)
+                    n += 1
+                    if not small:
+                        continue
+                    pyr = {r: np.zeros((width, r, r, 3), np.float32)
+                           for r in small}
+                    if base_hw in casc.resolutions:
+                        pyr[base_hw] = imgs
+                    np.asarray(self._fn(concept, width, "pyr")(
+                        {r: self._commit(v, dev)
+                         for r, v in pyr.items()}))
+                    n += 1
+        return n
+
+    # ------------------------------------------------------ request path --
+    def submit(self, concept: str, req: Request) -> None:
+        req.t_arrival = self.clock()
+        casc = self.cascades[concept]
+        st = self.stats[concept]
+        st.requests += 1
+        row = int(req.payload)
+        s = self.shard_of(row)
+        cached = int(self._shard_stores[s].column(casc.key)[row])
+        if cached < 0:
+            # the shard seed is a snapshot: a co-owning scan engine may
+            # have decided this row in the SHARED store after service
+            # construction — adopt the late write into the shard's own
+            # columns so the next lookup is local again
+            cached = int(self.store.column(casc.key)[row])
+            if cached >= 0:
+                self._shard_stores[s].record(casc.key,
+                                             np.array([row]), [cached])
+        if cached >= 0:                    # shard-owned read, no model
+            req.result = cached
+            req.t_done = req.t_arrival
+            st.store_hits += 1
+            st.latencies.append(0.0)
+            self.delivered.append(req.rid)
+            return
+        q = self._queues[s].setdefault(concept, [])
+        q.append(req)
+        if len(q) == 1:
+            self.wheel.schedule((s, concept),
+                                req.t_arrival + self.max_wait_s)
+        if len(q) >= self.batch_size:
+            self._flush(s, concept, "size")
+
+    def poll(self) -> None:
+        """Fire due deadlines, then harvest any finished batches without
+        blocking on in-flight device compute."""
+        now = self.clock()
+        for s, concept in self.wheel.pop_due(now):
+            if self._queues[s].get(concept):
+                self._flush(s, concept, "deadline")
+        self.deliver_ready()
+
+    def drain(self) -> None:
+        """Flush every queue and deliver every in-flight batch."""
+        for s in range(self.n_shards):
+            for concept in list(self._queues[s]):
+                while self._queues[s][concept]:
+                    self._flush(s, concept, "drain")
+        for dev in list(self._inflight):
+            self._deliver(dev)
+
+    # ----------------------------------------------------- flush/deliver --
+    def _flush(self, s: int, concept: str, reason: str) -> None:
+        q = self._queues[s][concept]
+        take, self._queues[s][concept] = \
+            q[:self.batch_size], q[self.batch_size:]
+        key = (s, concept)
+        self.wheel.cancel(key)
+        rest = self._queues[s][concept]
+        if rest:                           # new head keeps its deadline
+            self.wheel.schedule(key, rest[0].t_arrival + self.max_wait_s)
+        st = self.stats[concept]
+        setattr(st, f"{reason}_flushes",
+                getattr(st, f"{reason}_flushes") + 1)
+        self._dispatch(s, concept, take)
+
+    def _dispatch(self, s: int, concept: str, take: list) -> None:
+        casc = self.cascades[concept]
+        st = self.stats[concept]
+        nv = len(take)
+        width = slab_width(nv, self.batch_size)
+        rows = np.array([int(r.payload) for r in take], np.int64)
+        rows_p = pad_rows(rows, width)
+        dev = self.devices[s]
+        if dev in self._inflight:          # one in-flight batch per device
+            self._deliver(dev)
+
+        base_hw = self.images.shape[1]
+        small = [r for r in casc.resolutions if r != base_hw]
+        # probe the cache with the VALID rows only (the pad repeats the
+        # last row — probing it would double-count its entries), then
+        # pad the gathered blocks to slab width
+        cached = (self.repcache.lookup_rows(rows, small)
+                  if self.repcache is not None and small else None)
+        if cached is not None:
+            pyr = {r: (np.concatenate(
+                           [v, np.repeat(v[-1:], width - nv, axis=0)])
+                       if width > nv else v)
+                   for r, v in cached.items()}
+            if base_hw in casc.resolutions:
+                pyr[base_hw] = self.images[rows_p]
+            labels = self._fn(concept, width, "pyr")(
+                {r: self._commit(v, dev) for r, v in pyr.items()})
+            levels = None
+            st.rep_hit_rows += nv
+        else:
+            labels, levels = self._fn(concept, width, "base")(
+                self._commit(self.images[rows_p], dev))
+        st.batches += 1
+        st.rows_evaluated += nv
+        st.padded_slots += width - nv
+        self._inflight[dev] = _InFlight(s, concept, take, rows, labels,
+                                        levels)
+
+    def deliver_ready(self) -> None:
+        """Deliver finished in-flight batches; leave running ones in
+        flight (the dispatch-ahead overlap window)."""
+        for dev in list(self._inflight):
+            lab = self._inflight[dev].labels
+            if not hasattr(lab, "is_ready") or lab.is_ready():
+                self._deliver(dev)
+
+    def _deliver(self, dev) -> None:
+        inf = self._inflight.pop(dev, None)
+        if inf is None:
+            return
+        casc = self.cascades[inf.concept]
+        nv = len(inf.take)
+        labels = np.asarray(inf.labels)[:nv]    # deferred sync happens here
+        sstore = self._shard_stores[inf.shard]
+        sstore.record(casc.key, inf.rows, labels)
+        # post-flush commit: shard-store merge semantics restricted to
+        # the delivered rows (O(batch), not O(corpus), per delivery)
+        self.store.merge_rows_from(sstore, inf.rows)
+        if inf.levels is not None and self.repcache is not None:
+            for r, v in inf.levels.items():
+                self.repcache.put_rows(inf.rows, r, np.asarray(v)[:nv])
+        now = self.clock()
+        st = self.stats[inf.concept]
+        for req, lab in zip(inf.take, labels):
+            req.result = int(lab)
+            req.t_done = now
+            st.latencies.append(now - req.t_arrival)
+            self.delivered.append(req.rid)
+
+    # ------------------------------------------------------------- stats --
+    def latencies(self) -> list:
+        out = []
+        for st in self.stats.values():
+            out.extend(st.latencies)
+        return out
+
+    def summary(self) -> dict:
+        agg = {k: sum(getattr(st, k) for st in self.stats.values())
+               for k in ("requests", "store_hits", "rep_hit_rows",
+                         "rows_evaluated", "batches", "padded_slots",
+                         "size_flushes", "deadline_flushes",
+                         "drain_flushes")}
+        agg["shards"] = self.n_shards
+        agg["devices"] = len(set(self.devices))
+        agg["store_hit_rate"] = (agg["store_hits"] / agg["requests"]
+                                 if agg["requests"] else 0.0)
+        if self.repcache is not None:
+            agg["repcache"] = self.repcache.stats()
+        return agg

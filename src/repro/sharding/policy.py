@@ -273,6 +273,20 @@ def _hash_ids(ids: np.ndarray) -> np.ndarray:
     return h ^ (h >> np.uint64(31))
 
 
+def shard_route(ids, n_shards: int) -> np.ndarray:
+    """Stationary hash routing of individual row ids: the shard that
+    owns each row under ``strategy='hash'`` partitioning, WITHOUT
+    building a plan. ``plan_shards(ids, n, 'hash').shards[s]`` contains
+    exactly the ids with ``shard_route(ids, n) == s`` — the serving
+    path (serve/service.py) routes single-row requests with this and
+    lands on the same shard (hence the same shard-local virtual
+    columns) every scan-time hash plan used."""
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    ids = np.atleast_1d(np.asarray(ids, np.int64))
+    return (_hash_ids(ids) % np.uint64(n_shards)).astype(np.int64)
+
+
 def plan_shards(ids, n_shards: int, *, strategy: str = "range",
                 weights=None) -> ShardPlan:
     """Partition row ids into ``n_shards`` disjoint shards.
@@ -303,7 +317,7 @@ def plan_shards(ids, n_shards: int, *, strategy: str = "range",
         w = np.clip(w, 0.0, None) + 1e-12
 
     if strategy == "hash":
-        shard_of = (_hash_ids(ids) % np.uint64(n_shards)).astype(np.int64)
+        shard_of = shard_route(ids, n_shards)
         parts = [ids[shard_of == s] for s in range(n_shards)]
         wsums = [float(w[shard_of == s].sum()) for s in range(n_shards)]
         return ShardPlan(n_shards, strategy, tuple(parts), tuple(wsums))

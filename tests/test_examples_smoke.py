@@ -37,7 +37,19 @@ def test_query_engine_smoke():
 
 
 @pytest.mark.slow
-def test_serve_cascade_smoke():
-    out = _run_example("serve_cascade.py", ["--tiny"])
+def test_serve_cascade_async_smoke():
+    """Default path: the shard-aware AsyncCascadeService (DESIGN §10)."""
+    out = _run_example("serve_cascade.py", ["--tiny", "--shards", "2"])
+    assert "serving mode: async" in out
+    assert "2 shard queues" in out
+    assert "served 48 mixed requests" in out
+    assert "store hit rate" in out and "repcache hit rate" in out
+    assert "latency p50" in out
+
+
+@pytest.mark.slow
+def test_serve_cascade_sync_fallback_smoke():
+    out = _run_example("serve_cascade.py", ["--tiny", "--sync"])
+    assert "serving mode: sync" in out
     assert "served 48 mixed requests" in out
     assert "latency p50" in out

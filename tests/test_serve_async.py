@@ -1,0 +1,629 @@
+"""Shard-aware async serving subsystem (DESIGN.md §10): deadline/flush
+semantics under an injected fake clock (no wall-clock sleeps anywhere),
+the differential oracle async service ≡ sync batcher ≡ ScanEngine over
+the same request stream across shard counts, zero-invocation answers for
+store-decided rows, the cross-query representation cache (unit + engine
+hook + service wiring), the factored slab builder, stationary hash
+routing, and the (concept, cascade-id) batcher keying regression."""
+import math
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pipeline import build_cascade_service, build_scan_engine
+from repro.core.transforms import Representation
+from repro.engine.scan import (CompiledCascade, ScanEngine,
+                               VirtualColumnStore, naive_scan)
+from repro.engine.sharded import SLAB_FLOOR, pad_rows, slab_width
+from repro.serve import (AsyncCascadeService, CascadeService, DeadlineWheel,
+                         ManualClock, RepresentationCache, Request)
+from repro.sharding.policy import plan_shards, shard_route
+from test_query_engine import _toy_cascade, _uint8_images
+
+
+def _counting_cascade(concept, seed, counters, thresholds=None):
+    """Toy cascade whose model invocations are observable (jit=False
+    paths call the python fns once per dispatched batch)."""
+    casc = _toy_cascade(concept, seed, thresholds)
+    wrapped = []
+    for li, fn in enumerate(casc.model_fns):
+        def make(li, fn):
+            def f(x):
+                counters[concept][li] += 1
+                return fn(x)
+            return f
+        wrapped.append(make(li, fn))
+    casc.model_fns = wrapped
+    return casc
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    imgs = _uint8_images(210, 32, seed=4)
+    cascades = {
+        "a": _toy_cascade("a", 1),
+        "b": _toy_cascade("b", 2, [(0.25, 0.75), (0.3, 0.7),
+                                   (None, None)]),
+    }
+    return imgs, cascades
+
+
+def _stream(n, n_rows, seed=3, concepts=("a", "b")):
+    """Mixed request stream with repeats: (concept, row) pairs."""
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, n_rows, n)
+    return [(concepts[i % len(concepts)], int(rows[i])) for i in range(n)]
+
+
+def _reference_labels(imgs, cascades, stream):
+    """Per-(concept, row) ground truth from the scan engine."""
+    eng = ScanEngine(imgs, chunk=64)
+    out = {}
+    for c, casc in cascades.items():
+        rows = np.unique([r for cc, r in stream if cc == c])
+        eng.scan_rows([casc], rows)
+        for r in rows:
+            out[(c, int(r))] = int(eng.store.column(casc.key)[r])
+    return out
+
+
+# ======================================================== scheduler =======
+def test_manual_clock():
+    clk = ManualClock(5.0)
+    assert clk() == 5.0
+    assert clk.advance(0.25) == 5.25 and clk() == 5.25
+    with pytest.raises(ValueError):
+        clk.advance(-1.0)
+
+
+def test_deadline_wheel_due_order_and_cancel():
+    w = DeadlineWheel(granularity=0.01)
+    w.schedule("x", 1.00)
+    w.schedule("y", 0.50)
+    w.schedule("z", 2.00)
+    assert len(w) == 3 and w.next_deadline() == 0.50
+    assert w.pop_due(0.49) == []
+    assert w.pop_due(1.5) == ["y", "x"]          # deadline order
+    w.cancel("z")
+    assert w.pop_due(10.0) == [] and len(w) == 0
+    assert w.next_deadline() is None
+
+
+def test_deadline_wheel_reschedule_latest_wins():
+    w = DeadlineWheel(granularity=0.01)
+    w.schedule("k", 1.0)
+    w.schedule("k", 3.0)                          # stale 1.0 entry dropped
+    assert w.pop_due(2.0) == []
+    assert w.pop_due(3.0) == ["k"]
+    # sub-granularity deadlines within one slot stay exact
+    w.schedule("a", 0.0101)
+    w.schedule("b", 0.0199)
+    assert w.pop_due(0.015) == ["a"]
+    assert w.pop_due(0.02) == ["b"]
+    with pytest.raises(ValueError):
+        DeadlineWheel(granularity=0.0)
+
+
+# ==================================================== slab builder ========
+def test_slab_width_buckets_and_floor():
+    assert slab_width(1, 64) == SLAB_FLOOR
+    assert slab_width(16, 64) == 16
+    assert slab_width(17, 64) == 32
+    assert slab_width(33, 64) == 64
+    assert slab_width(200, 64) == 64              # capped at chunk
+    assert slab_width(3, 64, floor=4) == 4
+
+
+def test_pad_rows_repeats_last_id():
+    out = pad_rows(np.array([7, 9, 11]), 8)
+    assert out.tolist() == [7, 9, 11, 11, 11, 11, 11, 11]
+    assert pad_rows(np.array([5]), 1).tolist() == [5]
+
+
+def test_sharded_engine_still_uses_factored_slab_builder(corpus):
+    """The lockstep path routes through the module-level slab_width."""
+    imgs, cascades = corpus
+    from repro.engine.sharded import ShardedScanEngine
+    eng = ShardedScanEngine(imgs, shards=2, chunk=64)
+    assert eng._slab_width(3) == SLAB_FLOOR
+    assert eng._slab_width(40) == 64
+    ref = naive_scan(imgs, list(cascades.values()), chunk=64)
+    assert np.array_equal(
+        eng.execute(list(cascades.values())).indices, ref)
+
+
+# ===================================================== hash routing =======
+def test_shard_route_matches_hash_plan_and_is_stationary():
+    ids = np.arange(500)
+    for n in (1, 2, 8):
+        route = shard_route(ids, n)
+        plan = plan_shards(ids, n, strategy="hash")
+        for s in range(n):
+            assert np.array_equal(plan.shards[s], ids[route == s])
+        assert np.array_equal(route, shard_route(ids, n))  # stationary
+    assert shard_route(7, 4).shape == (1,)        # scalar row id works
+    with pytest.raises(ValueError):
+        shard_route(ids, 0)
+
+
+# ============================================ representation cache ========
+def test_repcache_lru_eviction_and_budget():
+    lvl = np.ones((4, 4, 3), np.float32)          # 192 bytes
+    cache = RepresentationCache(budget_bytes=lvl.nbytes * 3)
+    for row in range(3):
+        cache.put(row, 4, lvl * row)
+    assert len(cache) == 3 and cache.evictions == 0
+    cache.get(0, 4)                               # refresh row 0
+    cache.put(3, 4, lvl * 3)                      # evicts LRU = row 1
+    assert (0, 4) in cache and (1, 4) not in cache
+    assert cache.evictions == 1
+    assert cache.nbytes == lvl.nbytes * 3
+    # an entry larger than the whole budget is refused, not thrashed
+    cache.put(9, 64, np.zeros((64, 64, 3), np.float32))
+    assert (9, 64) not in cache and len(cache) == 3
+
+
+def test_repcache_entries_are_copies_and_exact():
+    cache = RepresentationCache()
+    block = np.arange(2 * 4 * 4 * 3, dtype=np.float32).reshape(2, 4, 4, 3)
+    cache.put_rows([10, 11], 4, block)
+    block[:] = -1.0                               # caller mutates its block
+    got = cache.get(10, 4)
+    assert got is not None and float(got[0, 0, 0]) == 0.0
+    # overwrite replaces bytes accounting, not duplicates
+    before = cache.nbytes
+    cache.put(10, 4, np.zeros((4, 4, 3), np.float32))
+    assert cache.nbytes == before
+
+
+def test_repcache_lookup_rows_all_or_none_accounting():
+    cache = RepresentationCache()
+    lvl = np.zeros((4, 4, 3), np.float32)
+    cache.put(0, 4, lvl)
+    cache.put(1, 4, lvl)
+    assert cache.lookup_rows([0, 1, 2], [4]) is None   # row 2 missing
+    # a failed lookup serves nothing: ALL 3 probed entries are misses
+    assert cache.misses == 3 and cache.hits == 0
+    cache.put(2, 4, lvl)
+    out = cache.lookup_rows([0, 1, 2], [4])
+    assert out is not None and out[4].shape == (3, 4, 4, 3)
+    assert cache.hits == 3
+    assert 0.0 < cache.hit_rate < 1.0
+    with pytest.raises(ValueError):
+        RepresentationCache(budget_bytes=0)
+
+
+def test_scan_engine_repcache_hook_bit_exact(corpus):
+    """A repcache-backed engine skips pyramid materialization on warmed
+    chunks and returns the identical row set; the cache is shared
+    across engines (cross-query reuse)."""
+    imgs, cascades = corpus
+    cascades = list(cascades.values())
+    ref = naive_scan(imgs, cascades, chunk=64)
+
+    cache = RepresentationCache(64 << 20)
+    eng1 = ScanEngine(imgs, chunk=64, repcache=cache)
+    r1 = eng1.execute(cascades)
+    assert np.array_equal(r1.indices, ref)
+    assert r1.stats.rep_rows_cached == 0 and r1.stats.chunks > 0
+
+    # a SECOND engine (fresh store: all labels recomputed) over the same
+    # cache: every chunk's pooled levels come from the cache
+    eng2 = ScanEngine(imgs, chunk=64, repcache=cache)
+    r2 = eng2.execute(cascades)
+    assert np.array_equal(r2.indices, ref)
+    assert r2.stats.rep_rows_cached == r2.stats.rows_scanned
+    assert r2.stats.chunks == 0                   # no pyramids built
+    assert cache.hits > 0
+
+
+# ============================= deadline/flush semantics (fake clock) ======
+def _fake_clock_service(imgs, cascades, **kw):
+    clk = ManualClock()
+    svc = AsyncCascadeService(imgs, cascades, clock=clk, **kw)
+    return clk, svc
+
+
+def test_deadline_triggered_partial_flush(corpus):
+    """Requests below batch_size sit in the queue until the oldest
+    request's deadline passes, then flush as ONE bucketed partial
+    batch; no flush happens a tick before the deadline."""
+    imgs, cascades = corpus
+    clk, svc = _fake_clock_service(imgs, cascades, shards=1,
+                                   batch_size=16, max_wait_s=0.010)
+    reqs = [Request(i, i) for i in range(3)]
+    for r in reqs:
+        svc.submit("a", r)
+    st = svc.stats["a"]
+    clk.advance(0.009)
+    svc.poll()                                    # before deadline: no flush
+    assert st.batches == 0 and all(r.result is None for r in reqs)
+    clk.advance(0.002)                            # past arrival + 10ms
+    svc.poll()
+    assert st.batches == 1 and st.deadline_flushes == 1
+    assert st.rows_evaluated == 3
+    assert st.padded_slots == SLAB_FLOOR - 3      # bucketed, not batch_size
+    svc.drain()
+    assert all(r.result in (0, 1) for r in reqs)
+
+
+def test_full_batch_flushes_without_deadline(corpus):
+    """batch_size requests flush immediately on submit; the queue's
+    deadline entry is cancelled (nothing left to fire)."""
+    imgs, cascades = corpus
+    clk, svc = _fake_clock_service(imgs, cascades, shards=1,
+                                   batch_size=8, max_wait_s=0.010)
+    for i in range(8):
+        svc.submit("a", Request(i, i))
+    st = svc.stats["a"]
+    assert st.batches == 1 and st.size_flushes == 1
+    assert len(svc.wheel) == 0
+    clk.advance(1.0)
+    svc.poll()                                    # nothing further to flush
+    assert st.batches == 1 and st.deadline_flushes == 0
+
+
+def test_leftover_requests_keep_their_deadline(corpus):
+    """A size-flush of a long queue re-schedules the remaining head's
+    ORIGINAL deadline (arrival + max_wait), not a fresh one."""
+    imgs, cascades = corpus
+    clk, svc = _fake_clock_service(imgs, cascades, shards=1,
+                                   batch_size=4, max_wait_s=0.010)
+    svc.submit("a", Request(0, 0))                # arrives at t=0
+    clk.advance(0.004)
+    for i in range(1, 6):                         # arrive at t=0.004
+        svc.submit("a", Request(i, i))            # -> size flush of 0..3
+    st = svc.stats["a"]
+    assert st.size_flushes == 1
+    assert svc.wheel.next_deadline() == pytest.approx(0.004 + 0.010)
+    clk.advance(0.011)                            # t=0.015 > 0.014
+    svc.poll()
+    assert st.deadline_flushes == 1 and st.batches == 2
+
+
+def test_in_order_delivery_per_queue(corpus):
+    """Evaluated results are delivered in submission order per (shard,
+    concept) queue, across multiple flushes and dispatch-ahead."""
+    imgs, cascades = corpus
+    clk, svc = _fake_clock_service(imgs, cascades, shards=1,
+                                   batch_size=8, max_wait_s=0.010)
+    # distinct rows: a repeated row could be answered from the store
+    # mid-stream (immediate delivery is documented to overtake queues)
+    rows = np.random.default_rng(0).permutation(len(imgs))[:30]
+    for i, row in enumerate(rows):
+        svc.submit("a", Request(i, int(row)))
+    clk.advance(0.011)
+    svc.poll()
+    svc.drain()
+    evaluated = [rid for rid in svc.delivered]
+    assert evaluated == sorted(evaluated)         # FIFO delivery
+    assert len(evaluated) == 30
+
+
+def test_store_decided_rows_answered_with_zero_invocations(corpus):
+    """Re-submitted decided rows answer from the shard-local virtual
+    columns on submit: no queueing, no batch, no model invocation —
+    observable through python-side call counters (jit=False)."""
+    imgs, _ = corpus
+    counters = {"a": [0, 0, 0]}
+    cascades = {"a": _counting_cascade("a", 1, counters)}
+    clk, svc = _fake_clock_service(imgs, cascades, shards=1,
+                                   batch_size=8, max_wait_s=0.010,
+                                   jit=False)
+    first = [Request(i, i) for i in range(8)]
+    for r in first:
+        svc.submit("a", r)
+    svc.drain()
+    calls = [list(v) for v in counters.values()]
+    assert counters["a"][0] > 0
+
+    again = [Request(100 + i, i) for i in range(8)]
+    for r in again:
+        svc.submit("a", r)                        # answered on submit
+    assert all(r.result == f.result for r, f in zip(again, first))
+    assert [list(v) for v in counters.values()] == calls
+    st = svc.stats["a"]
+    assert st.store_hits == 8 and st.batches == 1
+    svc.drain()                                   # nothing pending
+    assert st.batches == 1
+
+
+def test_store_sharing_with_scan_engine(corpus):
+    """A service built over a scan engine's store serves every
+    scan-decided row with zero invocations (ROADMAP: shard queue turns
+    the store lookup into a local read)."""
+    imgs, cascades = corpus
+    eng = ScanEngine(imgs, chunk=64)
+    eng.execute([cascades["a"]])                  # offline scan decides all
+    clk, svc = _fake_clock_service(imgs, cascades, shards=8,
+                                   batch_size=8, max_wait_s=0.010,
+                                   store=eng.store)
+    for i in range(32):
+        svc.submit("a", Request(i, i * 3))
+    st = svc.stats["a"]
+    assert st.store_hits == 32 and st.batches == 0
+
+
+def test_store_writes_after_construction_are_adopted(corpus):
+    """The shard seed is a snapshot: a scan that runs AFTER the service
+    is built still serves requests with zero invocations (submit falls
+    back to the shared store and adopts the late write shard-locally)."""
+    imgs, cascades = corpus
+    eng = ScanEngine(imgs, chunk=64)
+    clk, svc = _fake_clock_service(imgs, cascades, shards=4,
+                                   batch_size=8, max_wait_s=0.010,
+                                   store=eng.store)
+    eng.execute([cascades["a"]])                  # scan AFTER construction
+    for i in range(16):
+        svc.submit("a", Request(i, i * 5))
+    st = svc.stats["a"]
+    assert st.store_hits == 16 and st.batches == 0
+    # adopted into the shard's own columns: the corpus-wide fallback is
+    # no longer needed for those rows
+    for i in range(16):
+        row = i * 5
+        s = svc.shard_of(row)
+        key = cascades["a"].key
+        assert svc._shard_stores[s].column(key)[row] >= 0
+
+
+def test_merge_rows_from_matches_merge_from_on_subset():
+    """Row-restricted commit == full merge restricted to those rows;
+    rows outside the subset are untouched."""
+    rng = np.random.default_rng(3)
+    n = 100
+    rows = np.array([2, 5, 50, 99])
+    key = ("c", (1,))
+    a1 = VirtualColumnStore(n)
+    a2 = VirtualColumnStore(n)
+    src = VirtualColumnStore(n)
+    vals = rng.integers(-1, 2, n)
+    a1.column(key)[:] = vals
+    a2.column(key)[:] = vals
+    src.column(key)[:] = rng.integers(-1, 2, n)
+    a1.merge_rows_from(src, rows)
+    outside = np.setdiff1d(np.arange(n), rows)
+    assert np.array_equal(a1.column(key)[outside], vals[outside])
+    a2.merge_from(src)
+    assert np.array_equal(a1.column(key)[rows], a2.column(key)[rows])
+
+
+def test_service_repcache_from_pyramid_path_bit_exact(corpus):
+    """Once rows' pooled levels are cached (here: warmed by concept a's
+    flushes), a different concept's flush over the same rows runs the
+    from-pyramid variant — fewer pooling passes, identical labels."""
+    imgs, cascades = corpus
+    cache = RepresentationCache(64 << 20)
+    clk, svc = _fake_clock_service(imgs, cascades, shards=1,
+                                   batch_size=8, max_wait_s=0.010,
+                                   repcache=cache)
+    rows = list(range(16))
+    reqs_a = [Request(i, r) for i, r in enumerate(rows)]
+    for r in reqs_a:
+        svc.submit("a", r)
+    svc.drain()                                   # warms (row, 8/16) levels
+    assert svc.stats["a"].rep_hit_rows == 0
+
+    reqs_b = [Request(100 + i, r) for i, r in enumerate(rows)]
+    for r in reqs_b:
+        svc.submit("b", r)
+    svc.drain()
+    assert svc.stats["b"].rep_hit_rows == len(rows)
+    ref = _reference_labels(imgs, cascades,
+                            [("b", r) for r in rows])
+    assert all(req.result == ref[("b", r)]
+               for req, r in zip(reqs_b, rows))
+
+
+# ================================================ differential oracle =====
+@pytest.mark.parametrize("shards", [1, 2, 8])
+def test_async_sync_scan_differential(corpus, shards):
+    """The acceptance oracle: AsyncCascadeService answers bit-identical
+    labels to the synchronous CascadeService and to ScanEngine over the
+    same mixed request stream, at every shard count."""
+    imgs, cascades = corpus
+    stream = _stream(120, len(imgs), seed=11)
+    ref = _reference_labels(imgs, cascades, stream)
+
+    # sync batcher (capacities=None -> full-width levels, exact)
+    sync = CascadeService.from_cascades(cascades, batch_size=16,
+                                        max_wait_s=1e9)
+    sync_reqs = []
+    for i, (c, row) in enumerate(stream):
+        r = Request(i, jnp.asarray(imgs[row]))
+        sync.submit(c, r)
+        sync_reqs.append(r)
+    sync.drain()
+
+    svc = AsyncCascadeService(imgs, cascades, shards=shards,
+                              batch_size=16, max_wait_s=0.002,
+                              repcache=RepresentationCache())
+    async_reqs = []
+    for i, (c, row) in enumerate(stream):
+        r = Request(i, row)
+        svc.submit(c, r)
+        async_reqs.append(r)
+        svc.poll()
+    svc.drain()
+
+    for (c, row), sr, ar in zip(stream, sync_reqs, async_reqs):
+        assert ar.result == ref[(c, row)] == int(sr.result), (c, row)
+
+    # the whole stream again: every label is now committed, so the
+    # second pass is answered entirely from the store
+    before = svc.summary()
+    second = [Request(1000 + i, row) for i, (_, row) in enumerate(stream)]
+    for (c, _), r in zip(stream, second):
+        svc.submit(c, r)
+    after = svc.summary()
+    assert all(r.result == ref[(c, row)]
+               for (c, row), r in zip(stream, second))
+    assert after["store_hits"] - before["store_hits"] == len(stream)
+    assert after["rows_evaluated"] == before["rows_evaluated"]
+    assert after["batches"] == before["batches"]
+
+
+def test_shared_fn_cache_keyed_by_cascade_identity(corpus):
+    """A shared fn_cache (the benchmark idiom) must never serve a
+    retrained cascade's labels from a stale compile: keys carry the
+    cascade's (concept, cascade-id), not the bare concept name."""
+    imgs, _ = corpus
+    v1 = {"a": _toy_cascade("a", 1)}
+    v2 = {"a": _toy_cascade("a", 7)}               # same concept, new models
+    v2["a"].cascade_id = ("toy", 7)
+    shared: dict = {}
+    rows = list(range(24))
+
+    def serve(cascades):
+        svc = AsyncCascadeService(imgs, cascades, shards=1,
+                                  batch_size=8, max_wait_s=1e9,
+                                  fn_cache=shared)
+        reqs = [Request(i, r) for i, r in enumerate(rows)]
+        for r in reqs:
+            svc.submit("a", r)
+        svc.drain()
+        return [r.result for r in reqs]
+
+    got1, got2 = serve(v1), serve(v2)
+    ref1 = _reference_labels(imgs, v1, [("a", r) for r in rows])
+    ref2 = _reference_labels(imgs, v2, [("a", r) for r in rows])
+    assert got1 == [ref1[("a", r)] for r in rows]
+    assert got2 == [ref2[("a", r)] for r in rows]
+    assert got1 != got2                            # genuinely different models
+
+
+def test_repcache_refuses_a_second_corpus(corpus):
+    """One cache per corpus: (row, resolution) keys carry no corpus
+    identity, so attaching a different corpus raises instead of
+    serving another corpus's pixels."""
+    imgs, cascades = corpus
+    cache = RepresentationCache()
+    ScanEngine(imgs, chunk=64, repcache=cache)
+    # same pixel data in a different buffer is the SAME corpus
+    AsyncCascadeService(imgs.copy(), cascades, shards=1,
+                        repcache=cache)
+    other = _uint8_images(64, 32, seed=99)
+    with pytest.raises(ValueError):
+        ScanEngine(other, chunk=64, repcache=cache)
+    with pytest.raises(ValueError):
+        AsyncCascadeService(other, cascades, shards=1, repcache=cache)
+
+
+def test_service_observability_is_bounded(corpus):
+    """Delivery log and latency windows are bounded deques — a
+    resident service cannot grow per-request state forever."""
+    imgs, cascades = corpus
+    clk, svc = _fake_clock_service(imgs, cascades, shards=1,
+                                   batch_size=8)
+    assert svc.delivered.maxlen is not None
+    for st in svc.stats.values():
+        assert st.latencies.maxlen is not None
+
+
+def test_factory_builds_both_modes(corpus):
+    imgs, cascades = corpus
+    svc = build_cascade_service(imgs, cascades, shards=2, batch_size=8)
+    assert isinstance(svc, AsyncCascadeService)
+    assert svc.repcache is not None
+    sync = build_cascade_service(imgs, cascades, mode="sync",
+                                 batch_size=8)
+    assert isinstance(sync, CascadeService)
+    with pytest.raises(ValueError):
+        build_cascade_service(imgs, cascades, mode="threaded")
+    # factory can share one repcache between scan engine and service
+    cache = RepresentationCache()
+    eng = build_scan_engine(imgs, repcache=cache)
+    assert eng.repcache is cache
+    svc2 = build_cascade_service(imgs, cascades, shards=1,
+                                 repcache=cache)
+    assert svc2.repcache is cache
+
+
+# ==================================================== multidevice =========
+@pytest.mark.multidevice
+def test_shard_queues_spread_over_devices_dispatch_ahead(corpus):
+    """With the conftest-forced 8 host devices, 8 shard queues sit on 8
+    DISTINCT devices; a burst dispatches batches onto several devices
+    before any delivery is forced (the dispatch-ahead window), and
+    results stay exact."""
+    imgs, cascades = corpus
+    n = jax.device_count()
+    svc = AsyncCascadeService(imgs, cascades, shards=n, batch_size=8,
+                              max_wait_s=1e9)
+    assert len(set(svc.devices)) == n
+    # one full batch per shard, no poll in between: every dispatch parks
+    # on its own device in flight
+    rows_by_shard = {s: [] for s in range(n)}
+    for row in range(len(imgs)):
+        s = svc.shard_of(row)
+        if len(rows_by_shard[s]) < 8:
+            rows_by_shard[s].append(row)
+    rid = 0
+    reqs = []
+    for s, rows in rows_by_shard.items():
+        for row in rows:
+            r = Request(rid, row)
+            svc.submit("a", r)
+            reqs.append((row, r))
+            rid += 1
+    assert len(svc._inflight) == n                # n batches in flight
+    svc.drain()
+    ref = _reference_labels(imgs, cascades,
+                            [("a", row) for row, _ in reqs])
+    assert all(r.result == ref[("a", row)] for row, r in reqs)
+
+
+# ===================================== batcher keying regression ==========
+def test_sync_service_keeps_concepts_separate_when_cascade_id_collides():
+    """Two concepts whose cascades share a cascade id (the planner's
+    grid coordinates repeat across concepts) must keep SEPARATE batch
+    queues keyed (concept, cascade-id): each concept's requests run its
+    own models and come back in its own arrival order."""
+    hw = 8
+    rep = Representation(hw, "gray")
+
+    def runner(sign):
+        def run(payloads):
+            return [int(sign * float(np.asarray(p).mean()) > 0)
+                    for p in payloads]
+        return run
+
+    shared_id = (0, 3, 1)                         # same grid coordinates
+    service = CascadeService({"a": runner(+1), "b": runner(-1)},
+                             batch_size=4, max_wait_s=1e9,
+                             cascade_ids={"a": shared_id,
+                                          "b": shared_id})
+    assert set(service.batchers) == {("a", shared_id), ("b", shared_id)}
+    assert set(service.concepts) == {"a", "b"}
+
+    reqs = []
+    for i in range(8):                            # interleaved a/b stream
+        c = "a" if i % 2 == 0 else "b"
+        r = Request(i, np.full((hw, hw, 1), 1.0))
+        service.submit(c, r)
+        reqs.append((c, r))
+    service.drain()
+    for c, r in reqs:                             # per-concept models ran
+        assert int(r.result) == (1 if c == "a" else 0), (c, r.rid)
+    stats = service.stats
+    assert stats["a"].batches == 1 and stats["b"].batches == 1
+
+
+def test_from_cascades_shares_runner_only_for_same_object(corpus):
+    imgs, _ = corpus
+    shared = _toy_cascade("x", 5)
+    other = _toy_cascade("y", 6)
+    other.cascade_id = shared.cascade_id          # id collision, new models
+    svc = CascadeService.from_cascades(
+        {"x": shared, "x2": shared, "y": other}, batch_size=4,
+        max_wait_s=1e9)
+    b = svc.batchers
+    kx, kx2, ky = (("x", tuple(shared.cascade_id)),
+                   ("x2", tuple(shared.cascade_id)),
+                   ("y", tuple(other.cascade_id)))
+    assert set(b) == {kx, kx2, ky}                # distinct queues
+    assert b[kx].run_batch is b[kx2].run_batch    # shared compile
+    assert b[kx].run_batch is not b[ky].run_batch  # different models
