@@ -1,8 +1,10 @@
 """Multi-predicate query benchmark: the planned scan engine (shared
 per-chunk pyramid + selectivity x cost predicate ordering + masked
 evaluation + static-shape batching) vs the seed workflow of naive
-per-predicate full scans. Writes ``BENCH_query_engine.json`` at the repo
-root.
+per-predicate full scans, PLUS the joint cascade-set optimizer
+(DESIGN.md §11) vs independent per-predicate selection — both plans
+executed end-to-end on the same engine. Writes
+``BENCH_query_engine.json`` at the repo root.
 
   PYTHONPATH=src python -m benchmarks.bench_query_engine [--quick]
 
@@ -58,10 +60,20 @@ def _quick_path(out: Path) -> Path:
     return QUICK_DIR / out.with_suffix(".quick.json").name
 
 
-def build_systems(specs, *, steps: int, n_train: int, hw: int, log=print):
-    reps = [Representation(8, "gray"), Representation(16, "gray"),
-            Representation(hw, "rgb")]
-    archs = [TahomaCNNConfig(1, 8, 16)]
+def build_systems(specs, *, steps: int, n_train: int, hw: int, log=print,
+                  rich_grid: bool = False, recalibrate: bool = False):
+    """rich_grid widens the model grid (both colors at every resolution,
+    two architectures) so per-concept Pareto frontiers are big enough
+    for the joint-vs-independent comparison to have room to diverge."""
+    if rich_grid:
+        reps = [Representation(8, "gray"), Representation(8, "rgb"),
+                Representation(16, "gray"), Representation(16, "rgb"),
+                Representation(hw, "rgb")]
+        archs = [TahomaCNNConfig(1, 8, 16), TahomaCNNConfig(2, 16, 32)]
+    else:
+        reps = [Representation(8, "gray"), Representation(16, "gray"),
+                Representation(hw, "rgb")]
+        archs = [TahomaCNNConfig(1, 8, 16)]
     systems = {}
     t0 = time.time()
     for spec in specs:
@@ -70,7 +82,56 @@ def build_systems(specs, *, steps: int, n_train: int, hw: int, log=print):
             *three_way_split(x, y, seed=1), archs, reps, steps=steps)
     log(f"[bench] trained {sum(len(s.bank.entries) for s in systems.values())}"
         f" models in {time.time() - t0:.0f}s")
+    if rich_grid:
+        _stabilize_profiles(systems, recalibrate=recalibrate)
     return systems
+
+
+CALIBRATION = Path(__file__).resolve().parent / \
+    "calibrated_infer_costs.json"
+
+
+def _stabilize_profiles(systems, recalibrate: bool = False) -> None:
+    """Per-model inference costs are MEASURED per system
+    (core/pipeline.profile_infer_costs); run-to-run jitter on this box
+    is large enough (observed up to ~1.6x on the trusted model) to flip
+    Pareto frontiers, making the planned cascade sets — and therefore
+    the joint-vs-independent comparison — nondeterministic. The rich
+    grid's per-model costs are therefore PINNED from
+    ``benchmarks/calibrated_infer_costs.json`` (committed; measured on
+    a quiet container of this class — median of the init-time
+    measurements across the three per-concept systems, which train the
+    same grid) and the scenario profiles + evaluated-space caches are
+    rebuilt from them. Engine/naive timings stay fully
+    measured — only the PLANNER's inputs are pinned, exactly like the
+    paper's use of profiled constants. ``--recalibrate`` (or a missing
+    file) re-measures on this host and rewrites the file."""
+    import numpy as np
+
+    from repro.core.costs import CostProfile
+
+    names = list(next(iter(systems.values())).bank.names)
+    if CALIBRATION.exists() and not recalibrate:
+        stable = json.loads(CALIBRATION.read_text())
+        missing = [n for n in names if n not in stable]
+        if missing:
+            raise SystemExit(
+                f"calibrated_infer_costs.json lacks {missing}; rerun "
+                f"with --recalibrate after changing the bench grid")
+    else:
+        stable = {n: float(np.median([s.infer_s[n]
+                                      for s in systems.values()]))
+                  for n in names}
+        CALIBRATION.write_text(json.dumps(stable, indent=2) + "\n")
+        print(f"[bench] wrote {CALIBRATION}")
+    for s in systems.values():
+        s.infer_s = {n: float(stable[n]) for n in names}
+        s.profile = CostProfile.modeled(
+            s.infer_s, list(set(s.bank.reps)),
+            base_hw=s.bank.entries[0].rep.resolution
+            if s.profile.base_hw is None else s.profile.base_hw)
+        s.space_cache.clear()
+        s.dec_cache.clear()
 
 
 def bench_corpus(systems, specs, n_rows: int, *, chunk: int,
@@ -78,37 +139,64 @@ def bench_corpus(systems, specs, n_rows: int, *, chunk: int,
     qx, qlabels = make_multi_corpus(specs, n_rows, hw=32, seed=7,
                                     positive_rate=0.4)
     metadata = {"cam": np.arange(n_rows) % 2}
-    spec_q = QuerySpec(
-        metadata_eq={"cam": 0},
-        predicates=[PredicateClause(s.name, min_accuracy=0.8)
-                    for s in specs])
-    plan = plan_query(systems, spec_q, scenario=scenario,
-                      metadata=metadata)
+    # floor 0.9: with the pinned calibration this is where the full
+    # grid's frontiers offer real joint-vs-independent alternatives;
+    # the --quick grid trains too small for it and falls back
+    plan = plan_joint = None
+    for floor in (0.9, 0.8, None):
+        spec_q = QuerySpec(
+            metadata_eq={"cam": 0},
+            predicates=[PredicateClause(s.name, min_accuracy=floor)
+                        for s in specs])
+        try:
+            plan = plan_query(systems, spec_q, scenario=scenario,
+                              metadata=metadata)
+            plan_joint = plan_query(systems, spec_q, scenario=scenario,
+                                    metadata=metadata, joint=True)
+            break
+        except ValueError:
+            log(f"[bench] no cascade clears min_accuracy={floor}; "
+                f"relaxing")
     log(plan.explain(n_rows=n_rows))
+    log(plan_joint.explain(n_rows=n_rows))
 
     engine = ScanEngine(qx, metadata, chunk=chunk)
     naive_fns: dict = {}
 
-    def run_engine():
+    def run_engine(p):
         engine.reset_cache()      # fresh virtual columns: full query work
-        return engine.execute(plan.cascades, plan.metadata_eq)
+        return engine.execute(p.cascades, p.metadata_eq)
 
     def run_naive():
         return naive_scan(qx, plan.cascades, metadata, plan.metadata_eq,
                           chunk=chunk, _fn_cache=naive_fns)
 
-    res = run_engine()            # warm: jit compile both paths
+    res = run_engine(plan)        # warm: jit compile all three paths
+    res_joint = run_engine(plan_joint)
     ref = run_naive()
     identical = bool(np.array_equal(res.indices, ref))
+    # the joint plan may legitimately select DIFFERENT cascades (both
+    # satisfy the accuracy floor), so its row set is checked against its
+    # OWN naive reference; agreement with the independent plan's rows is
+    # reported, not asserted
+    ref_joint = naive_scan(qx, plan_joint.cascades, metadata,
+                           plan_joint.metadata_eq, chunk=chunk,
+                           _fn_cache=naive_fns)
+    joint_identical = bool(np.array_equal(res_joint.indices, ref_joint))
 
-    t_eng = min(_time(run_engine) for _ in range(repeats))
+    t_eng = min(_time(lambda: run_engine(plan)) for _ in range(repeats))
+    t_joint = min(_time(lambda: run_engine(plan_joint))
+                  for _ in range(repeats))
     t_nai = min(_time(run_naive) for _ in range(repeats))
+    # res/res_joint from the warm runs are still valid: reset_cache()
+    # makes every run identical full work, so stats are deterministic
     rows_eval = res.stats.rows_evaluated
     naive_rows = n_rows * len(specs)
     out = {
         "rows": n_rows,
         "chunk": chunk,
         "predicates": len(specs),
+        "min_accuracy": floor,
         "matches": int(len(res.indices)),
         "identical_row_sets": identical,
         "engine_s": round(t_eng, 4),
@@ -121,10 +209,41 @@ def bench_corpus(systems, specs, n_rows: int, *, chunk: int,
             "concept": s.concept, "rows_in": s.rows_in,
             "rows_evaluated": s.rows_evaluated, "batches": s.batches}
             for s in res.stats.stages],
+        "joint": {
+            "costing": plan_joint.costing,
+            "engine_s": round(t_joint, 4),
+            "joint_vs_independent_x": round(t_eng / t_joint, 2),
+            "identical_rows_vs_own_naive": joint_identical,
+            "same_rows_as_independent": bool(
+                np.array_equal(res_joint.indices, res.indices)),
+            "same_cascades_as_independent": (
+                [c.key for c in plan_joint.cascades]
+                == [c.key for c in plan.cascades]),
+            "matches": int(len(res_joint.indices)),
+            "rows_evaluated": int(res_joint.stats.rows_evaluated),
+            "level_set_independent": list(plan.level_set),
+            "level_set_joint": list(plan_joint.level_set),
+            # estimate keys name their cost model: the independent plan
+            # is priced by the paper's §VI reach-weighted walk, the
+            # joint plan by its own costing mode (engine-dense by
+            # default) — they are NOT directly comparable numbers; the
+            # measured engine_s above is the apples-to-apples result
+            "est_paper_cost_per_row_independent_us": round(
+                plan.estimated_cost_per_row() * 1e6, 2),
+            "est_joint_cost_per_row_us": round(
+                plan_joint.estimated_cost_per_row() * 1e6, 2),
+            "est_joint_unshared_cost_per_row_us": round(
+                plan_joint.unshared_cost_per_row() * 1e6, 2),
+        },
     }
     log(f"  rows={n_rows}: engine {t_eng:.3f}s vs naive {t_nai:.3f}s "
         f"-> {out['speedup_x']}x (row-evals {out['row_eval_ratio_x']}x "
         f"fewer, identical={identical})")
+    log(f"  rows={n_rows}: joint plan {t_joint:.3f}s vs independent "
+        f"{t_eng:.3f}s -> {out['joint']['joint_vs_independent_x']}x "
+        f"(levels {out['joint']['level_set_joint']} vs "
+        f"{out['joint']['level_set_independent']}, joint-identical="
+        f"{joint_identical})")
     return out
 
 
@@ -290,6 +409,11 @@ def main() -> None:
                          "BENCH_sharded_scan.json")
     ap.add_argument("--chunk", type=int, default=None,
                     help="override the per-shard chunk size")
+    ap.add_argument("--recalibrate", action="store_true",
+                    help="re-measure the pinned per-model inference "
+                         "costs (benchmarks/calibrated_infer_costs.json)"
+                         " on this host instead of using the committed "
+                         "calibration")
     args = ap.parse_args()
 
     import jax
@@ -303,7 +427,9 @@ def main() -> None:
                            else 128)
 
     systems = build_systems(specs, steps=steps,
-                            n_train=160 if args.quick else 240, hw=32)
+                            n_train=160 if args.quick else 240, hw=32,
+                            rich_grid=args.shards is None,
+                            recalibrate=args.recalibrate)
 
     if args.shards is not None:
         if jax.device_count() == 1:
@@ -335,6 +461,11 @@ def main() -> None:
                                   for c in report["corpora"])
     report["all_identical"] = all(c["identical_row_sets"]
                                   for c in report["corpora"])
+    report["joint_speedup_min_x"] = min(
+        c["joint"]["joint_vs_independent_x"] for c in report["corpora"])
+    report["joint_all_identical_vs_own_naive"] = all(
+        c["joint"]["identical_rows_vs_own_naive"]
+        for c in report["corpora"])
     out = _quick_path(OUT) if args.quick else OUT
     out.write_text(json.dumps(report, indent=2) + "\n")
     print(f"wrote {out}")

@@ -1,19 +1,27 @@
 """End-to-end multi-predicate query through the query engine
-(DESIGN.md §4):
+(DESIGN.md §4, §11):
 
   SELECT frames WHERE cam = 0 AND contains(a) AND contains(b) AND
                        contains(c)
 
 1. train one TAHOMA system (A x F grid -> thresholds -> cost profile ->
    evaluated cascade space) per concept;
-2. plan: select one cascade per predicate from its Pareto frontier under
-   the deployment scenario, order predicates by cost/(1-selectivity),
+2. plan: select the cascade SET under shared-representation costing
+   (``--planner joint``, the default: per-predicate Pareto frontiers as
+   candidate pools, shared pyramid levels priced once — DESIGN.md §11)
+   or one cascade per predicate independently (``--planner
+   independent``), order predicates by (marginal) cost/(1-selectivity),
    print the EXPLAIN-style physical plan;
 3. execute: stream the corpus in chunks, ONE shared representation
-   pyramid per chunk, cascades only on rows surviving earlier
-   predicates — and compare wall-clock + row set against naive
-   per-predicate full scans;
+   pyramid per chunk covering exactly the plan's level set, cascades
+   only on rows surviving earlier predicates — and compare wall-clock +
+   row set against naive per-predicate full scans;
 4. re-run a re-planned query to show partial virtual-column reuse.
+
+``--adaptive`` attaches the planner's OnlineReorderer: the engine feeds
+observed per-flush selectivities back and re-orders surviving predicates
+mid-scan when the eval-split estimates drift (row sets stay
+bit-identical — DESIGN.md §11.3).
 
 With ``--shards N`` the survivor set is partitioned across N shard
 executors (DESIGN.md §9: pmap lockstep over the host's devices; set
@@ -22,6 +30,7 @@ multi-chip host on CPU) and EXPLAIN additionally prints the shard
 layout. Row sets are bit-identical to the unsharded engine.
 
   PYTHONPATH=src python examples/query_engine.py [--scenario CAMERA]
+                                                 [--planner joint]
                                                  [--shards N]
 """
 import argparse
@@ -48,12 +57,41 @@ from repro.engine import (PredicateClause, QuerySpec,  # noqa: E402
                           naive_scan, plan_query)
 
 
+EXPLAIN_HELP = """\
+EXPLAIN output (PhysicalPlan.explain, DESIGN.md §4.1/§11.2):
+  per predicate:  the chosen cascade, its estimated accuracy, standalone
+    cost/row, selectivity, ordering rank cost/(1-sel), and the fraction
+    of rows reaching it under the plan order.
+  joint plans add per predicate:  'levels={...}' the pyramid levels the
+    cascade touches; 'shared={...}' the levels inherited from EARLIER
+    predicates (materialized once per chunk, free here); 'rep/row
+    marginal X vs standalone Y' the representation cost actually charged
+    under sharing vs the §VI standalone price; 'infer/row' the expected
+    pure-inference cost.
+  joint plans add a summary:  'shared-representation savings' = unshared
+    minus joint est. cost/row, and the pyramid level set the engine will
+    materialize once per chunk (== PhysicalPlan.level_set + raw base).
+"""
+
+
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        epilog=EXPLAIN_HELP,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--scenario", default="CAMERA",
                     choices=["INFER_ONLY", "ARCHIVE", "ONGOING", "CAMERA"])
     ap.add_argument("--min-accuracy", type=float, default=0.8)
     ap.add_argument("--chunk", type=int, default=64)
+    ap.add_argument("--planner", default="joint",
+                    choices=["joint", "independent"],
+                    help="joint = select the cascade SET under shared-"
+                         "representation costing (DESIGN.md §11); "
+                         "independent = per-predicate Pareto selection")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="refine selectivities online: re-order "
+                         "surviving predicates mid-scan when observed "
+                         "per-flush selectivity drifts from the "
+                         "eval-split estimate (bit-identical rows)")
     ap.add_argument("--shards", type=int, default=0,
                     help="partition the scan across N shard executors "
                          "(0 = single-host engine)")
@@ -99,7 +137,7 @@ def main():
         predicates=[PredicateClause(s.name, min_accuracy=args.min_accuracy)
                     for s in specs])
     plan = plan_query(systems, spec_q, scenario=args.scenario,
-                      metadata=metadata)
+                      metadata=metadata, joint=args.planner == "joint")
 
     engine = build_scan_engine(qx, metadata, shards=args.shards,
                                chunk=args.chunk,
@@ -109,12 +147,25 @@ def main():
     print()
     print(plan.explain(n_rows=n_query, shard_plan=shard_plan))
 
+    monitor = None
+    if args.adaptive:
+        if args.shards:
+            # re-ordering would desync the lockstep supersteps for zero
+            # dispatch savings (engine/sharded.py docstring)
+            print("note: --adaptive is a serial-engine feature and is "
+                  "ignored with --shards")
+        else:
+            from repro.engine import OnlineReorderer
+            monitor = OnlineReorderer.from_plan(plan,
+                                                min_rows=args.chunk // 2)
+
     t0 = time.perf_counter()
     if shard_plan is not None:           # execute the layout EXPLAIN shows
         res = engine.execute(plan.cascades, plan.metadata_eq,
                              shard_plan=shard_plan)
     else:
-        res = engine.execute(plan.cascades, plan.metadata_eq)
+        res = engine.execute(plan.cascades, plan.metadata_eq,
+                             monitor=monitor)
     t_engine = time.perf_counter() - t0
 
     t0 = time.perf_counter()
@@ -130,6 +181,11 @@ def main():
     for s in res.stats.stages:
         print(f"  {s.concept}: {s.rows_in} in -> {s.rows_evaluated} "
               f"evaluated ({s.batches} batches, {s.rows_cached} cached)")
+    if monitor is not None:
+        print(f"  adaptive: {res.stats.reorders} mid-scan re-orderings "
+              f"(observed selectivities: "
+              + ", ".join(f"{c.concept}={monitor.refined(c.key):.2f}"
+                          for c in plan.cascades) + ")")
     if args.shards:
         st = res.stats
         print(f"  shards: {st.plan.describe()}  backend={st.backend} "

@@ -22,12 +22,19 @@ degrade gracefully to the seed's from-base pricing.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Mapping
 
 from repro.core.transforms import Representation
 
 SCENARIOS = ("INFER_ONLY", "ARCHIVE", "ONGOING", "CAMERA")
+
+# ``DecomposedCost.rep_s`` key for the ARCHIVE scenario's full-size raw
+# image load. It is not a pyramid level, but it shares exactly like one:
+# a multi-predicate scan loads each raw image ONCE no matter how many
+# cascades read representations derived from it. 0 can never collide
+# with a real resolution.
+FULL_LOAD = 0
 
 # Deployment-environment constants used when costs are modeled instead of
 # measured. Per-image fixed overheads reflect file open + JPEG decode for
@@ -116,3 +123,119 @@ def rep_cost_s(profile: CostProfile, rep: Representation,
     if scenario == "CAMERA":
         return profile.transform_from_s(rep, source_hw)
     raise ValueError(scenario)
+
+
+# ---------------------------------------------- decomposed §VI pricing -----
+@dataclass
+class DecomposedCost:
+    """One cascade's expected §VI seconds/image, split into the two
+    physically different spends (DESIGN.md §11):
+
+    ``infer_s``  — expected pure-inference seconds/image (every level's
+                   infer_s weighted by its reach probability);
+    ``rep_s``    — expected representation-HANDLING seconds/image, keyed
+                   by the pyramid level (RGB resolution) each charge
+                   materializes, plus ``FULL_LOAD`` for ARCHIVE's raw
+                   load. These are the charges a multi-predicate scan can
+                   SHARE: the engine materializes one pyramid per chunk
+                   covering the union of every cascade's levels, so a
+                   level an earlier predicate already pays for is free to
+                   later predicates.
+
+    ``total_s`` reproduces the standalone §VI expected cost exactly
+    (``== CascadeSpace.time_s[i]``, tests/test_joint_planner.py);
+    ``marginal_s`` is the same cascade priced when ``materialized``
+    levels already exist — the joint planner's unit of cost."""
+    infer_s: float
+    rep_s: dict = field(default_factory=dict)   # {resolution|FULL_LOAD: s}
+
+    @property
+    def levels(self) -> frozenset:
+        """Every rep_s key this cascade touches (pyramid resolutions,
+        plus FULL_LOAD under ARCHIVE)."""
+        return frozenset(self.rep_s)
+
+    @property
+    def rep_total_s(self) -> float:
+        return float(sum(self.rep_s.values()))
+
+    @property
+    def total_s(self) -> float:
+        """Standalone expected seconds/image (the §VI cost the cascade
+        evaluator prices and the independent planner ranks by)."""
+        return self.infer_s + self.rep_total_s
+
+    def marginal_rep_s(self, materialized) -> float:
+        """Rep-handling cost excluding levels in ``materialized`` (levels
+        an earlier predicate in the plan order already pays for). Never
+        exceeds ``rep_total_s`` — the basis of the joint planner's
+        never-worse-than-independent guarantee."""
+        return float(sum(s for r, s in self.rep_s.items()
+                         if r not in materialized))
+
+    def marginal_s(self, materialized) -> float:
+        return self.infer_s + self.marginal_rep_s(materialized)
+
+
+def decompose_cascade_cost(levels, scores_eval, reps, infer_s,
+                           profile: CostProfile, scenario: str,
+                           pyramid: bool = True,
+                           dense_levels: bool = False) -> DecomposedCost:
+    """Decompose one cascade's expected cost over the eval split.
+
+    ``levels``: [(model_idx, p_low|None, p_high|None)] (the
+    cascade.spec_levels format); ``scores_eval``: (M, I) cached scores;
+    ``reps``: per-model Representation. The walk is the vectorized twin
+    of ``cascade.cascade_time_naive`` — every charge a level incurs is
+    identical for all images reaching it, so summing per-level charges
+    weighted by reach fractions reproduces the per-image walk exactly —
+    but each rep-handling charge is attributed to the pyramid level
+    (resolution) it materializes instead of being folded into one
+    scalar. ARCHIVE's full-size raw load is split out under the
+    ``FULL_LOAD`` key (it too is shared across predicates).
+
+    ``dense_levels=True`` prices the ENGINE's execution instead of the
+    paper's per-image walk: every level is charged at reach probability
+    1. The scan paths deliberately run full-width levels (static
+    shapes, batch-packing-independent labels — engine/scan.py
+    CompiledCascade), so a flushed batch pays EVERY level of the
+    cascade for every row; reach-weighted §VI costing systematically
+    undercharges multi-level cascades there. The joint planner uses
+    this mode by default (engine/planner.plan_query costing='engine')
+    because the plan it emits is executed by exactly those paths."""
+    import numpy as np
+
+    s = np.asarray(scores_eval)
+    n = s.shape[1]
+    active = np.ones(n, bool)
+    seen: list = []                     # Representations already priced
+    mat: list[int] = []                 # materialized pyramid resolutions
+    rep_charges: dict = {}
+    infer_total = 0.0
+    for m, lo, hi in levels:
+        p = (1.0 if dense_levels
+             else float(active.sum()) / n)   # P(reach this level)
+        if p == 0.0:
+            break
+        rep = reps[m]
+        if rep not in seen:
+            src = None
+            if pyramid and mat:
+                usable = [r for r in mat if r % rep.resolution == 0]
+                src = min(usable) if usable else None
+            c = rep_cost_s(profile, rep, scenario, first_rep=not seen,
+                           source_hw=src)
+            if scenario == "ARCHIVE" and not seen:
+                rep_charges[FULL_LOAD] = (rep_charges.get(FULL_LOAD, 0.0)
+                                          + p * profile.load_full_s)
+                c -= profile.load_full_s
+            rep_charges[rep.resolution] = (
+                rep_charges.get(rep.resolution, 0.0) + p * c)
+            seen.append(rep)
+            mat.append(rep.resolution)
+        infer_total += p * float(infer_s[m])
+        if lo is None:
+            break
+        o = s[m]
+        active = active & ~((o <= lo) | (o >= hi))
+    return DecomposedCost(infer_total, rep_charges)

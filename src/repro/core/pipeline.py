@@ -161,6 +161,7 @@ class TahomaSystem:
     eval_truth: np.ndarray
     targets: tuple
     space_cache: dict = field(default_factory=dict)
+    dec_cache: dict = field(default_factory=dict)
 
     def cascade_space(self, scenario: str, *, max_level: int = 3,
                       reps_subset=None, streaming: bool = False,
@@ -191,6 +192,30 @@ class TahomaSystem:
         if plain:
             self.space_cache[key] = space
         return space
+
+    def decomposed_cost(self, space: CascadeSpace, index: int,
+                        scenario: str, *, dense_levels: bool = False):
+        """Cascade ``index``'s §VI cost split into inference vs
+        per-pyramid-level representation handling
+        (core/costs.DecomposedCost) — the joint planner's costing unit
+        (DESIGN.md §11). ``dense_levels`` prices the scan engine's
+        full-width level execution (every level at reach 1) instead of
+        the paper's reach-weighted walk. Memoized per (scenario, mode,
+        physical cascade): the walk re-simulates the cascade over the
+        cached eval scores, and joint planning prices every
+        candidate-pool member."""
+        from repro.core.cascade import spec_levels
+        from repro.core.costs import decompose_cascade_cost
+
+        key = (scenario, bool(dense_levels), int(space.kind[index]),
+               int(space.i1[index]), int(space.i2[index]))
+        if key not in self.dec_cache:
+            infer = np.array([self.infer_s[n] for n in self.bank.names])
+            self.dec_cache[key] = decompose_cascade_cost(
+                spec_levels(space, index, self.p_low, self.p_high),
+                self.eval_scores, self.bank.reps, infer, self.profile,
+                scenario, dense_levels=dense_levels)
+        return self.dec_cache[key]
 
     def compiled_cascade(self, space: CascadeSpace, index: int, *,
                          concept: str = "pred", capacities=None):

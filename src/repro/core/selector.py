@@ -28,7 +28,27 @@ def select(space: CascadeSpace, *, min_accuracy: float | None = None,
            min_throughput: float | None = None) -> Selection:
     """Pick from the Pareto set: with a min_accuracy constraint return the
     fastest qualifying cascade; with min_throughput the most accurate
-    qualifying one; with neither, the most accurate overall."""
+    qualifying one; with neither, the most accurate overall. Implemented
+    as a pick from ``select_candidates`` (the pool is fastest-first and
+    the frontier is strictly ordered, so the ends are exactly those two
+    rules) — the joint planner's never-worse guarantee depends on this
+    pick being a MEMBER of the candidate pool, which is now true by
+    construction."""
+    pool = select_candidates(space, min_accuracy=min_accuracy,
+                             min_throughput=min_throughput)
+    return pool[0] if min_accuracy is not None else pool[-1]
+
+
+def select_candidates(space: CascadeSpace, *,
+                      min_accuracy: float | None = None,
+                      min_throughput: float | None = None
+                      ) -> list[Selection]:
+    """EVERY Pareto-frontier cascade satisfying the clause constraints,
+    fastest-first — the joint planner's per-predicate candidate pool
+    (engine/planner.plan_query joint=True). ``select`` picks one element
+    of this pool (the independent rule); joint selection searches the
+    product of pools instead, so the independent pick is always a member
+    and the joint plan can never be priced worse."""
     idx = pareto_set(space)
     acc = space.acc[idx]
     thr = space.throughput[idx]
@@ -39,11 +59,10 @@ def select(space: CascadeSpace, *, min_accuracy: float | None = None,
         mask &= thr >= min_throughput
     if not mask.any():
         raise ValueError("no cascade satisfies the constraints")
-    cand = np.where(mask)[0]
-    j = cand[np.argmax(thr[cand])] if min_accuracy is not None \
-        else cand[np.argmax(acc[cand])]
-    i = int(idx[j])
-    return Selection(i, float(space.acc[i]), float(space.throughput[i]))
+    cand = idx[np.where(mask)[0]]
+    cand = cand[np.argsort(space.time_s[cand], kind="stable")]
+    return [Selection(int(i), float(space.acc[i]),
+                      float(space.throughput[i])) for i in cand]
 
 
 # --------------------------------------------- planner-facing estimates ----

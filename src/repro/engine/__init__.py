@@ -1,9 +1,12 @@
-"""Query engine (DESIGN.md §4): logical→physical planner + unified
-multi-predicate scan executor over physically-optimized cascades."""
-from repro.engine.planner import (PhysicalPlan, PlannedPredicate,
-                                  PredicateClause, QuerySpec,
-                                  expected_scan_cost, order_predicates,
-                                  plan_query, predicate_rank)
+"""Query engine (DESIGN.md §4, §11): logical→physical planner (joint or
+independent cascade selection) + unified multi-predicate scan executor
+over physically-optimized cascades."""
+from repro.engine.planner import (OnlineReorderer, PhysicalPlan,
+                                  PlannedPredicate, PredicateClause,
+                                  QuerySpec, expected_scan_cost,
+                                  joint_scan_cost, order_predicates,
+                                  order_predicates_shared, plan_query,
+                                  predicate_rank)
 from repro.engine.scan import (CompiledCascade, ScanEngine, ScanResult,
                                ScanStats, VirtualColumnStore,
                                make_batch_runner, naive_scan, stage_needs)
@@ -11,10 +14,11 @@ from repro.engine.sharded import (ShardedScanEngine, ShardedScanResult,
                                   ShardedScanStats)
 
 __all__ = [
-    "CompiledCascade", "PhysicalPlan", "PlannedPredicate",
-    "PredicateClause", "QuerySpec", "ScanEngine", "ScanResult",
-    "ScanStats", "ShardedScanEngine", "ShardedScanResult",
+    "CompiledCascade", "OnlineReorderer", "PhysicalPlan",
+    "PlannedPredicate", "PredicateClause", "QuerySpec", "ScanEngine",
+    "ScanResult", "ScanStats", "ShardedScanEngine", "ShardedScanResult",
     "ShardedScanStats", "VirtualColumnStore", "expected_scan_cost",
-    "make_batch_runner", "naive_scan", "order_predicates", "plan_query",
+    "joint_scan_cost", "make_batch_runner", "naive_scan",
+    "order_predicates", "order_predicates_shared", "plan_query",
     "predicate_rank", "stage_needs",
 ]

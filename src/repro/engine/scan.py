@@ -23,6 +23,26 @@ Because every per-row computation (box-filter pooling, per-sample CNN
 inference) is independent of the surrounding batch at a fixed shape, the
 selected row set is bit-identical to ``naive_scan``'s one-predicate-at-
 a-time full scans (tests/test_query_engine.py).
+
+Ownership and invariants (DESIGN.md §4, §11):
+
+* the PLANNER (engine/planner.py) decides WHAT runs — the cascade set,
+  its order, and therefore the pyramid level set; this engine decides
+  HOW — it materializes per chunk exactly the union of the executed
+  cascades' resolutions plus the raw base (``stage_needs``; for a
+  planned query that union == ``PhysicalPlan.level_set``), reported in
+  ``ScanStats.pyramid_levels``. Shared levels are materialized ONCE per
+  chunk no matter how many cascades read them;
+* a row is "decided" for a cascade when its virtual column holds 0/1
+  (−1 = unknown). Decided rows are never re-evaluated; a computed label
+  is never overwritten (``VirtualColumnStore`` semantics below) — the
+  store is the single source of truth shared by the serial engine, the
+  sharded engine's shard-local seeds/merges, and the async service;
+* the accept condition (every cascade labels 1) is an order-invariant
+  conjunction of per-row, batch-independent labels — which is what
+  makes predicate re-ordering (including MID-SCAN re-ordering via the
+  ``monitor`` hook, engine/planner.OnlineReorderer) and any
+  chunk/buffer/shard layout produce bit-identical row sets.
 """
 from __future__ import annotations
 
@@ -161,6 +181,12 @@ class ScanStats:
     rep_rows_cached: int = 0  # rows whose pooled levels came from the
     #                           cross-query representation cache (no
     #                           per-chunk pyramid materialization)
+    reorders: int = 0         # mid-scan predicate re-orderings applied
+    #                           (engine/planner.OnlineReorderer hook)
+    pyramid_levels: tuple = ()  # the per-chunk materialization set: the
+    #                           union of every cascade's resolutions plus
+    #                           the raw base (== PhysicalPlan.level_set
+    #                           of the plan being executed, plus base)
     stages: list = field(default_factory=list)
 
     @property
@@ -249,24 +275,38 @@ class ScanEngine:
         return mask
 
     def execute(self, cascades: Sequence[CompiledCascade],
-                metadata_eq: Mapping | None = None) -> ScanResult:
+                metadata_eq: Mapping | None = None, *,
+                monitor=None) -> ScanResult:
         """SELECT row ids WHERE metadata_eq AND every cascade labels 1,
-        evaluating cascades in the given (planner's) order."""
+        evaluating cascades in the given (planner's) order. ``monitor``
+        (engine/planner.OnlineReorderer) enables mid-scan predicate
+        re-ordering from observed selectivities."""
         mask = self.metadata_mask(metadata_eq)
         ids_all = np.where(mask)[0]
         if not cascades:
             return ScanResult(ids_all, ScanStats())
-        return self.scan_rows(cascades, ids_all)
+        return self.scan_rows(cascades, ids_all, monitor=monitor)
 
     def scan_rows(self, cascades: Sequence[CompiledCascade],
                   ids_all: np.ndarray, *,
-                  store: VirtualColumnStore | None = None) -> ScanResult:
+                  store: VirtualColumnStore | None = None,
+                  monitor=None) -> ScanResult:
         """The shard-invocable scan unit: run the chunk/stage pipeline
         over exactly ``ids_all`` (already metadata-filtered row ids),
         reading and writing ``store`` (default: this engine's corpus-wide
         store). ShardedScanEngine (engine/sharded.py) drives one call per
         shard against shard-local stores; ``execute`` is the 1-shard
-        case over the whole survivor set."""
+        case over the whole survivor set.
+
+        ``monitor`` is the planner's online-refinement hook
+        (engine/planner.OnlineReorderer): every evaluation flush feeds
+        it observed labels, and at each chunk boundary it may propose a
+        cheaper predicate order — the engine then drains its stage
+        buffers under the old order (identical to the end-of-scan
+        drain) and rebuilds the pipeline in the new order. Final row
+        sets are bit-identical with or without re-ordering (per-row
+        label independence; the accept condition is an order-invariant
+        conjunction)."""
         import jax.numpy as jnp
 
         store = self.store if store is None else store
@@ -278,6 +318,7 @@ class ScanEngine:
             return ScanResult(np.sort(ids_all), stats)
 
         needed, union_res = stage_needs(cascades, self.images.shape[1])
+        stats.pyramid_levels = union_res
         pyr_fn = self._pyramid_fn(union_res)
         runners = [self._cascade_fn(c) for c in cascades]
         buffers = [_StageBuffer(self.chunk, needed[s]) for s in range(k)]
@@ -337,9 +378,29 @@ class ScanEngine:
             st.rows_evaluated += nv
             st.batches += 1
             store.record(casc.key, ids, labels)
+            if monitor is not None:
+                monitor.observe(casc.key, labels)
             keep = labels == 1
             route(stage + 1, ids[keep], {r: v[keep]
                                          for r, v in down.items()})
+
+        def apply_order(perm: list) -> None:
+            """Re-order the stage pipeline mid-scan: drain every buffer
+            under the CURRENT order (exactly the end-of-scan drain, so
+            buffered rows complete normally), then permute the
+            per-stage structures and rebuild empty buffers with the new
+            order's carry lists. The cascade SET is unchanged, so the
+            chunk-ingest union pyramid (union_res) stays valid."""
+            nonlocal needed
+            for s in range(k):
+                flush(s)
+            cascades[:] = [cascades[i] for i in perm]
+            stats.stages[:] = [stats.stages[i] for i in perm]
+            runners[:] = [runners[i] for i in perm]
+            needed, _ = stage_needs(cascades, self.images.shape[1])
+            buffers[:] = [_StageBuffer(self.chunk, needed[s])
+                          for s in range(k)]
+            stats.reorders += 1
 
         stats.rows_scanned = len(ids_all)
         base_hw = self.images.shape[1]
@@ -370,6 +431,10 @@ class ScanEngine:
                     for r in small:
                         self.repcache.put_rows(sel, r, rows[r])
             route(0, sel, rows)
+            if monitor is not None and k > 1:
+                perm = monitor.propose(cascades)
+                if perm is not None:
+                    apply_order(perm)
         for s in range(k):                # drain partial buffers in order
             flush(s)
 

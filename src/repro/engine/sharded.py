@@ -42,6 +42,19 @@ ShardPlan assigns every surviving row to exactly one shard — so the
 merged row set is bit-identical to the single-shard `ScanEngine` and to
 `naive_scan`, for any shard count, partitioning strategy, or backend
 (tests/test_sharded_scan.py holds all three equal).
+
+Ownership and invariants: each SHARD materializes its own pyramid —
+shard-locally, on its own device, covering exactly the same union level
+set the serial engine would build (``stage_needs``; ==
+``PhysicalPlan.level_set`` + base for a planned query) — the corpus has
+no global pyramid. This ENGINE (and only it) merges: shard-local stores
+are seeded with their partition's rows before the scan and merged back
+corpus-wide after (``VirtualColumnStore.merge_from``: union of computed
+entries; a "decided" row — one whose column holds 0/1 — is never
+overwritten, by any shard, in any merge order). The planner's
+mid-scan re-order hook is a serial-engine feature; the lockstep backend
+runs the plan's order unchanged (per-shard re-ordering would desync the
+supersteps for zero dispatch savings).
 """
 from __future__ import annotations
 
@@ -359,6 +372,8 @@ class ShardedScanEngine:
         the host boundary. Host-side routing walks cached labels between
         stages, exactly like the serial engine."""
         needed, union_res = stage_needs(cascades, self.images.shape[1])
+        for sh in stats.shards:     # same per-chunk materialization set
+            sh.pyramid_levels = union_res    # as the serial shard unit
         width = min(plan.n_shards, max(len(set(self.devices)), 1))
         accepted: list[np.ndarray] = []
 

@@ -21,6 +21,15 @@ different color reps share entries.
 Accounting is all-or-none per lookup: ``lookup_rows`` returns stacked
 blocks only when EVERY (row, level) entry is present — the batch then
 skips pooling entirely — and counts hits/misses at entry granularity.
+
+Joint planning alignment (DESIGN.md §11.2): keys are plain
+``(row, resolution)``, and the scan engine publishes exactly the
+non-base levels of the plan it executes (``PhysicalPlan.level_set`` for
+a planned query — the same union ``stage_needs`` materializes per
+chunk). So a joint-planned scan warms serving for precisely the level
+set the joint optimizer chose, and a smaller joint level union means
+fewer bytes cached per row — no key-space change was needed for joint
+plans (tests/test_joint_planner.py covers the scan→service handoff).
 """
 from __future__ import annotations
 

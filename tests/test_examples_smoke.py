@@ -30,10 +30,13 @@ def test_quickstart_smoke():
 
 
 def test_query_engine_smoke():
-    out = _run_example("query_engine.py", ["--tiny"])
+    out = _run_example("query_engine.py", ["--tiny", "--adaptive"])
     assert "PHYSICAL PLAN" in out
+    assert "[joint, engine costing]" in out       # joint is the default
+    assert "shared-representation savings" in out
     assert "identical rows: True" in out
     assert "reused from virtual columns" in out
+    assert "adaptive:" in out
 
 
 @pytest.mark.slow
