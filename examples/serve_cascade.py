@@ -7,11 +7,14 @@ with zero model invocations), and pooled pyramid levels are shared
 across concepts through the cross-query representation cache.
 
   PYTHONPATH=src python examples/serve_cascade.py [--requests 256]
-      [--shards 4] [--repeat 0.4] [--sync]
+      [--shards 4] [--repeat 0.4] [--sync] [--host]
 
 ``--sync`` falls back to the synchronous-polling CascadeService
 (serve/batcher.py) — the pre-§10 serving path, kept as the baseline
 benchmarks/bench_serve.py prices the async subsystem against.
+``--host`` drives the async service with the wall-clock event host
+(serve/host.py, DESIGN.md §12.1): a timer-parked daemon thread fires
+deadline flushes autonomously, so the client never calls ``poll()``.
 """
 import argparse
 import sys
@@ -79,6 +82,9 @@ def main():
                          "virtual columns")
     ap.add_argument("--sync", action="store_true",
                     help="legacy synchronous batcher (serve/batcher.py)")
+    ap.add_argument("--host", action="store_true",
+                    help="drive the async service with the wall-clock "
+                         "event host (no caller poll())")
     ap.add_argument("--tiny", action="store_true",
                     help="smoke-test scale (CI)")
     args = ap.parse_args()
@@ -110,6 +116,11 @@ def main():
     if mode == "async":
         n = service.warmup()      # no compile stalls under live traffic
         print(f"warmed {n} executables")
+    host = None
+    if args.host and mode == "async":
+        from repro.serve import EventHost
+        host = EventHost(service).start()
+        print("event host started (deadlines fire without caller poll)")
 
     # mixed stream: each request asks about ONE predicate's concept;
     # a --repeat fraction re-asks an already-served frame (interactive
@@ -124,12 +135,17 @@ def main():
         row = offset[spec.name] + j
         r = Request(i, row if mode == "async"
                     else jnp.asarray(corpus[row]))
-        service.submit(spec.name, r)
+        (host or service).submit(spec.name, r)
         results.append((spec.name, j, r))
-        service.poll()
+        if host is None:
+            service.poll()
         if args.pace:
             time.sleep(args.pace)
-    service.drain()
+    if host is not None:
+        host.wait_idle(60.0)      # event-driven: no poll, no drain
+        host.stop()
+    else:
+        service.drain()
     dt = time.perf_counter() - t0
 
     lat = np.array(service.latencies()) * 1e3
@@ -156,8 +172,14 @@ def main():
               f"deadline/size/drain flushes "
               f"{summ['deadline_flushes']}/{summ['size_flushes']}"
               f"/{summ['drain_flushes']}")
-    print(f"latency p50={np.percentile(lat, 50):.1f}ms "
-          f"p99={np.percentile(lat, 99):.1f}ms")
+        p = summ["latency_ms"]
+        print(f"latency p50={p['p50']}ms p95={p['p95']}ms "
+              f"p99={p['p99']}ms  queue depth max="
+              f"{summ['queue_depth']['max']}  in-flight max="
+              f"{summ['in_flight']['max']}")
+    else:
+        print(f"latency p50={np.percentile(lat, 50):.1f}ms "
+              f"p99={np.percentile(lat, 99):.1f}ms")
 
 
 if __name__ == "__main__":

@@ -217,6 +217,22 @@ class TahomaSystem:
                 scenario, dense_levels=dense_levels)
         return self.dec_cache[key]
 
+    def compiled_ladder(self, space: CascadeSpace, index: int, *,
+                        concept: str = "pred",
+                        min_accuracy: float | None = None,
+                        max_rungs: int | None = None) -> list:
+        """The serving degradation ladder for the cascade at ``index``:
+        every strictly cheaper Pareto-frontier cascade (optionally
+        floored/truncated), compiled to executables with DISTINCT
+        cascade ids so their labels land in their own virtual columns
+        (core/selector.degradation_ladder; serve/service.py ladders=)."""
+        from repro.core.selector import degradation_ladder
+
+        return [self.compiled_cascade(space, sel.index, concept=concept)
+                for sel in degradation_ladder(space, index,
+                                              min_accuracy=min_accuracy,
+                                              max_rungs=max_rungs)]
+
     def compiled_cascade(self, space: CascadeSpace, index: int, *,
                          concept: str = "pred", capacities=None):
         """Bridge to the query engine (DESIGN.md §4): decode cascade
@@ -294,16 +310,28 @@ def build_cascade_service(images, cascades, *, mode: str = "async",
                           shards: int | None = None, batch_size: int = 32,
                           max_wait_s: float = 0.005, clock=None,
                           repcache_bytes: int | None = 64 << 20,
-                          repcache=None, store=None, jit: bool = True):
-    """System-level serving factory (DESIGN.md §10): ``mode='async'``
-    builds the shard-aware AsyncCascadeService (deadline scheduler,
-    per-shard device queues, cross-query representation cache — a fresh
-    ``repcache_bytes``-budget cache unless the caller shares one via
-    ``repcache``, e.g. the same object backing a ScanEngine);
-    ``mode='sync'`` builds the legacy synchronous-polling
-    CascadeService from the same {concept -> CompiledCascade} table.
-    ``store`` shares a scan engine's virtual columns with the service so
-    previously scanned rows are served with zero model invocations."""
+                          repcache=None, store=None, jit: bool = True,
+                          host: bool = False, **hardening):
+    """System-level serving factory (DESIGN.md §10, §12):
+    ``mode='async'`` builds the shard-aware AsyncCascadeService
+    (deadline scheduler, per-shard device queues, cross-query
+    representation cache — a fresh ``repcache_bytes``-budget cache
+    unless the caller shares one via ``repcache``, e.g. the same object
+    backing a ScanEngine); ``mode='sync'`` builds the legacy
+    synchronous-polling CascadeService from the same
+    {concept -> CompiledCascade} table. ``store`` shares a scan
+    engine's virtual columns with the service so previously scanned
+    rows are served with zero model invocations.
+
+    Hardening (async only; DESIGN.md §12): extra keyword args pass
+    straight to AsyncCascadeService — ``queue_limit``, ``overload``,
+    ``ladders`` (e.g. from ``TahomaSystem.compiled_ladder``),
+    ``degrade`` (a DegradeConfig), ``batch_timeout_s``,
+    ``request_deadline_s``, ``dispatch_retries``, ``faults``.
+    ``host=True`` wraps the service in a started wall-clock EventHost
+    (serve/host.py) so deadlines fire without caller cooperation; the
+    caller gets the HOST (``host.service`` reaches the service) and
+    must ``stop()`` it."""
     import time
 
     from repro.serve.batcher import CascadeService
@@ -312,13 +340,20 @@ def build_cascade_service(images, cascades, *, mode: str = "async",
 
     clock = clock or time.perf_counter
     if mode == "sync":
+        if hardening or host:
+            raise ValueError("hardening knobs require mode='async'")
         return CascadeService.from_cascades(cascades, batch_size,
                                             max_wait_s, clock, jit=jit)
     if mode != "async":
         raise ValueError(f"unknown serving mode {mode!r}")
     if repcache is None and repcache_bytes:
         repcache = RepresentationCache(repcache_bytes)
-    return AsyncCascadeService(images, cascades, shards=shards,
-                               batch_size=batch_size,
-                               max_wait_s=max_wait_s, clock=clock,
-                               repcache=repcache, store=store, jit=jit)
+    service = AsyncCascadeService(images, cascades, shards=shards,
+                                  batch_size=batch_size,
+                                  max_wait_s=max_wait_s, clock=clock,
+                                  repcache=repcache, store=store,
+                                  jit=jit, **hardening)
+    if host:
+        from repro.serve.host import EventHost
+        return EventHost(service).start()
+    return service

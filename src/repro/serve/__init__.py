@@ -1,15 +1,24 @@
 """Serving layer: the sync size-or-deadline batcher (batcher.py), the
 shard-aware async service (service.py, DESIGN.md §10) with its deadline
-scheduler (scheduler.py) and cross-query representation cache
-(repcache.py), plus LM-serving pieces (continuous batching, KV cache,
+scheduler (scheduler.py), cross-query representation cache
+(repcache.py), wall-clock event host (host.py), overload/fault
+hardening (faults.py — typed Shed/TimedOut results, fault plans;
+DESIGN.md §12), plus LM-serving pieces (continuous batching, KV cache,
 speculative decoding)."""
 from repro.serve.batcher import Batcher, BatcherStats, CascadeService, Request
+from repro.serve.faults import (DeviceError, FaultInjector, FaultPlan,
+                                NeverReadyLabels, Shed, TimedOut,
+                                TransientComputeError, is_label)
+from repro.serve.host import EventHost, FakeTimer, WallTimer
 from repro.serve.repcache import RepresentationCache
 from repro.serve.scheduler import DeadlineWheel, ManualClock
-from repro.serve.service import AsyncCascadeService, ServiceStats
+from repro.serve.service import (AsyncCascadeService, DegradeConfig,
+                                 ServiceStats)
 
 __all__ = [
     "AsyncCascadeService", "Batcher", "BatcherStats", "CascadeService",
-    "DeadlineWheel", "ManualClock", "RepresentationCache", "Request",
-    "ServiceStats",
+    "DeadlineWheel", "DegradeConfig", "DeviceError", "EventHost",
+    "FakeTimer", "FaultInjector", "FaultPlan", "ManualClock",
+    "NeverReadyLabels", "RepresentationCache", "Request", "ServiceStats",
+    "Shed", "TimedOut", "TransientComputeError", "WallTimer", "is_label",
 ]

@@ -36,7 +36,20 @@ class ManualClock:
 
 
 class DeadlineWheel:
-    """Bucketed deadline index over opaque hashable keys."""
+    """Bucketed deadline index over opaque hashable keys.
+
+    Stale entries (cancelled or superseded schedules) are normally
+    discarded lazily when their slot is swept — but cancel-heavy load
+    (every size-triggered serving flush cancels its group's deadline)
+    can park garbage tuples in FUTURE slots that a sweep never reaches
+    until their slot time passes. ``schedule``/``cancel`` therefore
+    compact eagerly once the stale count exceeds
+    ``max(COMPACT_MIN, COMPACT_FACTOR * live)``: the slots are rebuilt
+    from the live map in O(live), so total slot storage stays bounded
+    by O(live) regardless of the schedule/cancel churn rate."""
+
+    COMPACT_MIN = 64
+    COMPACT_FACTOR = 4
 
     def __init__(self, granularity: float = 0.001):
         if granularity <= 0:
@@ -44,25 +57,49 @@ class DeadlineWheel:
         self.granularity = float(granularity)
         self._slots: dict[int, list] = {}      # slot -> [(deadline, key)]
         self._live: dict = {}                  # key -> its live deadline
+        self._entries = 0                      # tuples stored across slots
+        self.compactions = 0
 
     def __len__(self) -> int:
         return len(self._live)
 
+    @property
+    def stored_entries(self) -> int:
+        """Slot tuples currently held (live + stale) — the quantity the
+        compaction bound caps (regression-tested)."""
+        return self._entries
+
     def _slot(self, t: float) -> int:
         return int(t / self.granularity)
 
+    def _maybe_compact(self) -> None:
+        stale = self._entries - len(self._live)
+        if stale <= max(self.COMPACT_MIN,
+                        self.COMPACT_FACTOR * len(self._live)):
+            return
+        self._slots = {}
+        for key, deadline in self._live.items():
+            self._slots.setdefault(self._slot(deadline), []).append(
+                (deadline, key))
+        self._entries = len(self._live)
+        self.compactions += 1
+
     def schedule(self, key, deadline: float) -> None:
         """(Re-)schedule ``key``; the newest deadline wins, any earlier
-        slot entry for the key turns stale and is dropped on sweep."""
+        slot entry for the key turns stale and is dropped on sweep (or
+        eagerly, by compaction)."""
         deadline = float(deadline)
         self._live[key] = deadline
         self._slots.setdefault(self._slot(deadline), []).append(
             (deadline, key))
+        self._entries += 1
+        self._maybe_compact()
 
     def cancel(self, key) -> None:
         """Forget ``key`` (no-op if absent) — the size-triggered flush
         path cancels the group's deadline."""
         self._live.pop(key, None)
+        self._maybe_compact()
 
     def pop_due(self, now: float) -> list:
         """Remove and return every key whose live deadline is <= now,
@@ -79,6 +116,7 @@ class DeadlineWheel:
                     del self._live[key]
                 else:
                     keep.append((deadline, key))
+            self._entries -= len(self._slots[slot]) - len(keep)
             if keep:
                 self._slots[slot] = keep
             else:

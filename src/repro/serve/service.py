@@ -1,4 +1,4 @@
-"""Shard-aware async cascade serving (DESIGN.md §10).
+"""Shard-aware async cascade serving (DESIGN.md §10, hardening §12).
 
 ``AsyncCascadeService`` replaces the synchronous-polling
 ``CascadeService`` (serve/batcher.py) for request streams over a
@@ -17,7 +17,9 @@ resident corpus ("does frame ROW contain CONCEPT?"):
   batches are assembled with the lockstep's bucketed power-of-2 slab
   builder (`engine/sharded.slab_width`/`pad_rows`), so a
   deadline-triggered partial flush pays bucket-width compute, not the
-  sync batcher's full pad-to-capacity.
+  sync batcher's full pad-to-capacity. ``poll()`` only runs when a
+  caller ticks it — the wall-clock event host (serve/host.py) drives it
+  autonomously in production.
 * **dispatch-ahead** — one in-flight batch per device:
   ``block_until_ready`` is deferred to result delivery, so host-side
   routing and gather of the next batch overlap the device compute of
@@ -37,6 +39,33 @@ resident corpus ("does frame ROW contain CONCEPT?"):
   otherwise the from-base variant runs and publishes its freshly pooled
   levels. The same cache object can back a ``ScanEngine``, so offline
   scans warm the online path.
+
+Overload/fault hardening (all OFF by default — the default-parameter
+service is request-for-request bit-identical to the pre-hardening one):
+
+* **admission control** — ``queue_limit`` bounds every (shard, concept)
+  queue; a full queue rejects with a typed ``Shed`` result
+  (serve/faults.py) instead of growing without bound. Queue-depth and
+  in-flight gauges are exposed via ``summary()``.
+* **degradation ladder** — ``ladders[concept]`` lists cheaper
+  Pareto-frontier cascades (core/selector.degradation_ladder) below the
+  primary; a per-concept load controller watches queue depth / observed
+  flush latency at flush time and steps the ACTIVE cascade down under
+  pressure (and back up after ``recover_after`` calm flushes) — trading
+  accuracy for latency exactly the way the paper's frontier is meant to
+  be used. Degraded labels commit under the degraded cascade's OWN
+  ``casc.key`` — the (concept, cascade-id) store keying means they can
+  never poison the primary's virtual column — and are counted
+  separately (``ServiceStats.degraded_rows``).
+* **fault recovery** — ``batch_timeout_s`` bounds every in-flight
+  batch: a batch that isn't ready by its timeout marks its device
+  failed and is re-dispatched to a healthy device (bounded by
+  ``dispatch_retries``), else its requests complete with a typed
+  ``TimedOut`` result. ``request_deadline_s`` bounds time-in-queue the
+  same way. Dispatch-time faults (``DeviceError``,
+  ``TransientComputeError`` — injectable via serve/faults.FaultPlan)
+  retry/re-route under the same budget. Nothing hangs: every request
+  terminates with a label, a ``Shed``, or a ``TimedOut``.
 
 Exactness: batches run full-width cascade levels
 (``caps = [width] * (L-1)``), deliberately ignoring
@@ -58,6 +87,8 @@ import numpy as np
 from repro.engine.scan import CompiledCascade, VirtualColumnStore
 from repro.engine.sharded import pad_rows, slab_width
 from repro.serve.batcher import Request
+from repro.serve.faults import (DeviceError, Shed, TimedOut,
+                                TransientComputeError)
 from repro.serve.scheduler import DeadlineWheel
 from repro.sharding.policy import shard_route
 
@@ -74,6 +105,16 @@ class ServiceStats:
     size_flushes: int = 0
     deadline_flushes: int = 0
     drain_flushes: int = 0
+    # hardening counters (all stay 0 on the default-parameter service)
+    shed: int = 0              # admission-rejected (typed Shed result)
+    expired: int = 0           # in-queue request deadline expiries
+    timeouts: int = 0          # batch-timeout completions (TimedOut)
+    retries: int = 0           # batch re-dispatches (fault/timeout)
+    degraded_rows: int = 0     # rows answered by a non-primary rung
+    degraded_batches: int = 0
+    degrade_steps: int = 0     # ladder step-downs
+    recover_steps: int = 0     # ladder step-ups
+    depth_max: int = 0         # max queued (all shards) for this concept
     # bounded window (newest first out the back) so a resident service
     # can't grow a float per request forever
     latencies: deque = field(
@@ -81,14 +122,66 @@ class ServiceStats:
 
 
 @dataclass
+class DegradeConfig:
+    """Load-controller thresholds for the degradation ladder: step DOWN
+    one rung when a concept's total queued depth reaches ``high_depth``
+    (or a delivered flush took ``high_latency_s``+); step back UP after
+    ``recover_after`` consecutive flushes observed at ``low_depth`` or
+    less. Observations happen at flush time, so recovery needs traffic
+    — which is exactly when the rung matters."""
+    high_depth: int = 64
+    low_depth: int = 4
+    high_latency_s: float | None = None
+    recover_after: int = 4
+
+
+class _LoadController:
+    """Per-concept hysteresis controller over ladder rung indices
+    (0 = primary). One step per observation, calm-streak recovery."""
+
+    def __init__(self, cfg: DegradeConfig, n_levels: int):
+        self.cfg = cfg
+        self.n_levels = n_levels
+        self.level = 0
+        self._calm = 0
+
+    def force_down(self) -> bool:
+        """Immediate step-down (admission pressure). True if it moved."""
+        self._calm = 0
+        if self.level < self.n_levels - 1:
+            self.level += 1
+            return True
+        return False
+
+    def observe(self, depth: int, latency_s: float | None = None) -> int:
+        cfg = self.cfg
+        hot = depth >= cfg.high_depth or (
+            cfg.high_latency_s is not None and latency_s is not None
+            and latency_s >= cfg.high_latency_s)
+        if hot:
+            self.force_down()
+        elif depth <= cfg.low_depth:
+            self._calm += 1
+            if self._calm >= cfg.recover_after and self.level > 0:
+                self.level -= 1
+                self._calm = 0
+        else:
+            self._calm = 0
+        return self.level
+
+
+@dataclass
 class _InFlight:
     """A dispatched, not-yet-delivered batch parked on its device."""
     shard: int
     concept: str
+    casc: CompiledCascade      # the rung that ran (commit under ITS key)
     take: list                 # the batch's Requests (arrival order)
     rows: np.ndarray           # their row ids (unpadded)
     labels: object             # device array; forced at delivery
     levels: dict | None        # device arrays for the repcache, or None
+    t_dispatch: float = 0.0    # clock() at dispatch (batch timeout base)
+    retries: int = 0           # re-dispatches already burned
 
 
 class AsyncCascadeService:
@@ -97,16 +190,25 @@ class AsyncCascadeService:
     ``submit(concept, Request(rid, row_id))`` answers immediately from
     the row's shard-local virtual columns when the label is known;
     otherwise the request joins its (shard, concept) queue. ``poll()``
-    fires due deadlines and harvests finished batches; ``drain()``
-    flushes and delivers everything. Results land on ``Request.result``
-    exactly like the sync service."""
+    fires due deadlines, expires over-deadline work, recovers timed-out
+    batches, and harvests finished batches; ``drain()`` flushes and
+    delivers everything. Results land on ``Request.result`` exactly
+    like the sync service — a 0/1 label, or a typed ``Shed``/
+    ``TimedOut`` when hardening knobs reject/expire the request."""
 
     def __init__(self, images, cascades: Mapping[str, CompiledCascade],
                  *, shards: int | None = None, batch_size: int = 32,
                  max_wait_s: float = 0.005, clock=time.perf_counter,
                  repcache=None, store: VirtualColumnStore | None = None,
                  jit: bool = True, devices: Sequence | None = None,
-                 fn_cache: dict | None = None):
+                 fn_cache: dict | None = None,
+                 queue_limit: int | None = None, overload: str = "shed",
+                 ladders: Mapping[str, Sequence[CompiledCascade]]
+                 | None = None,
+                 degrade: DegradeConfig | None = None,
+                 batch_timeout_s: float | None = None,
+                 request_deadline_s: float | None = None,
+                 dispatch_retries: int = 2, faults=None):
         from repro.launch.mesh import shard_devices
 
         self.images = np.asarray(images, np.float32)
@@ -127,6 +229,34 @@ class AsyncCascadeService:
             repcache.bind_corpus(corpus_token(self.images))
         self.wheel = DeadlineWheel(granularity=max(self.max_wait_s / 4,
                                                    1e-6))
+
+        # ------------------------------------------ hardening knobs --
+        if overload not in ("shed", "degrade"):
+            raise ValueError(f"unknown overload policy {overload!r}")
+        self.queue_limit = None if queue_limit is None \
+            else max(1, int(queue_limit))
+        self.overload = overload
+        self.batch_timeout_s = batch_timeout_s
+        self.request_deadline_s = request_deadline_s
+        self.dispatch_retries = int(dispatch_retries)
+        self.faults = faults
+        # ladder[0] is always the primary cascade; load controllers
+        # exist only when there is anything to step down to
+        self._ladder: dict[str, list[CompiledCascade]] = {
+            c: [casc, *((ladders or {}).get(c, ()))]
+            for c, casc in self.cascades.items()}
+        self._ctl: dict[str, _LoadController | None] = {
+            c: (_LoadController(degrade or DegradeConfig(), len(rungs))
+                if len(rungs) > 1 else None)
+            for c, rungs in self._ladder.items()}
+        self._last_flush_lat: dict[str, float] = {}
+        # device health: indices into the unique-device ordering; a
+        # failed device is never dispatched to again this session
+        self._unique_devices = list(dict.fromkeys(self.devices))
+        self._dev_index = {d: i for i, d in
+                           enumerate(self._unique_devices)}
+        self._failed: set[int] = set()
+        self._inflight_max = 0
 
         # corpus-wide store (shared with the caller when given, so a
         # scan engine's virtual columns serve requests directly) plus
@@ -162,26 +292,55 @@ class AsyncCascadeService:
     def shard_of(self, row: int) -> int:
         return int(self._row_shard[int(row)])
 
+    def active_level(self, concept: str) -> int:
+        ctl = self._ctl[concept]
+        return ctl.level if ctl is not None else 0
+
+    def _active_cascade(self, concept: str) -> CompiledCascade:
+        return self._ladder[concept][self.active_level(concept)]
+
+    def _all_cascades(self) -> dict:
+        """Every distinct ladder rung across concepts, keyed by
+        casc.key (warmup target)."""
+        out = {}
+        for rungs in self._ladder.values():
+            for casc in rungs:
+                out[casc.key] = casc
+        return out
+
+    def _device_for(self, shard: int):
+        """The shard's device, re-routed past failed devices: the first
+        healthy device by a shard-stable rotation, or None when every
+        device has failed."""
+        dev = self.devices[shard]
+        if self._dev_index[dev] not in self._failed:
+            return dev
+        healthy = [d for d in self._unique_devices
+                   if self._dev_index[d] not in self._failed]
+        if not healthy:
+            return None
+        return healthy[shard % len(healthy)]
+
     def _commit(self, x, dev):
         if not self.jit:
             return np.asarray(x)
         import jax
         return jax.device_put(np.asarray(x), dev)
 
-    def _fn(self, concept: str, width: int, variant: str):
+    def _fn(self, casc: CompiledCascade, width: int, variant: str):
         """Compiled batch runner, cached per (cascade key, slab width,
         variant) — the cascade's (concept, cascade-id) key, not the
         bare concept, so a shared fn_cache can never serve a retrained
         cascade's labels from a stale compile (same reason naive_scan's
-        _fn_cache keys by casc.key). 'base': raw rows in, labels +
-        freshly pooled non-base levels out. 'pyr': cached pooled levels
-        in, labels out."""
-        key = (self.cascades[concept].key, width, variant)
+        _fn_cache keys by casc.key; ladder rungs land on their own
+        entries the same way). 'base': raw rows in, labels + freshly
+        pooled non-base levels out. 'pyr': cached pooled levels in,
+        labels out."""
+        key = (casc.key, width, variant)
         if key not in self._fns:
             from repro.core.executor import run_cascade_on_pyramid
             from repro.core.transforms import materialize_pyramid
 
-            casc = self.cascades[concept]
             res = tuple(casc.resolutions)
             base_hw = self.images.shape[1]
             small = tuple(r for r in res if r != base_hw)
@@ -206,24 +365,26 @@ class AsyncCascadeService:
         return self._fns[key]
 
     def warmup(self, widths: Sequence[int] | None = None) -> int:
-        """Pre-compile AND execute one dummy batch per (device, concept,
-        slab width, variant) so live traffic never hits a compile
-        stall — serving cold-start elimination. Default widths: every
-        bucket ``slab_width`` can emit for this batch_size. Dummy
-        batches never touch the stores or the repcache. Returns the
-        number of executables exercised."""
+        """Pre-compile AND execute one dummy batch per (device, cascade
+        rung, slab width, variant) so live traffic never hits a compile
+        stall — serving cold-start elimination, degradation rungs
+        included (stepping down must not stall on a compile exactly
+        when the service is overloaded). Default widths: every bucket
+        ``slab_width`` can emit for this batch_size. Dummy batches
+        never touch the stores or the repcache. Returns the number of
+        executables exercised."""
         if widths is None:
             widths = sorted({slab_width(n, self.batch_size)
                              for n in range(1, self.batch_size + 1)})
         base_hw = self.images.shape[1]
         rows = np.zeros(max(widths), np.int64)
         n = 0
-        for concept, casc in self.cascades.items():
+        for casc in self._all_cascades().values():
             small = [r for r in casc.resolutions if r != base_hw]
             for width in widths:
                 imgs = self.images[rows[:width]]
                 for dev in dict.fromkeys(self.devices):
-                    lab, _ = self._fn(concept, width, "base")(
+                    lab, _ = self._fn(casc, width, "base")(
                         self._commit(imgs, dev))
                     np.asarray(lab)
                     n += 1
@@ -233,7 +394,7 @@ class AsyncCascadeService:
                            for r in small}
                     if base_hw in casc.resolutions:
                         pyr[base_hw] = imgs
-                    np.asarray(self._fn(concept, width, "pyr")(
+                    np.asarray(self._fn(casc, width, "pyr")(
                         {r: self._commit(v, dev)
                          for r, v in pyr.items()}))
                     n += 1
@@ -242,30 +403,48 @@ class AsyncCascadeService:
     # ------------------------------------------------------ request path --
     def submit(self, concept: str, req: Request) -> None:
         req.t_arrival = self.clock()
-        casc = self.cascades[concept]
         st = self.stats[concept]
         st.requests += 1
         row = int(req.payload)
         s = self.shard_of(row)
-        cached = int(self._shard_stores[s].column(casc.key)[row])
-        if cached < 0:
-            # the shard seed is a snapshot: a co-owning scan engine may
-            # have decided this row in the SHARED store after service
-            # construction — adopt the late write into the shard's own
-            # columns so the next lookup is local again
-            cached = int(self.store.column(casc.key)[row])
-            if cached >= 0:
-                self._shard_stores[s].record(casc.key,
-                                             np.array([row]), [cached])
-        if cached >= 0:                    # shard-owned read, no model
-            req.result = cached
-            req.t_done = req.t_arrival
-            st.store_hits += 1
-            st.latencies.append(0.0)
-            self.delivered.append(req.rid)
-            return
+        # answer from the most accurate decided rung: primary first,
+        # then any active degraded rung (a degraded label is still a
+        # valid answer for a degraded-mode service, and it lives under
+        # its own key, so the primary column is never consulted wrongly)
+        rungs = self._ladder[concept][: self.active_level(concept) + 1]
+        for casc in rungs:
+            cached = int(self._shard_stores[s].column(casc.key)[row])
+            if cached < 0:
+                # the shard seed is a snapshot: a co-owning scan engine
+                # may have decided this row in the SHARED store after
+                # service construction — adopt the late write into the
+                # shard's own columns so the next lookup is local again
+                cached = int(self.store.column(casc.key)[row])
+                if cached >= 0:
+                    self._shard_stores[s].record(
+                        casc.key, np.array([row]), [cached])
+            if cached >= 0:                # shard-owned read, no model
+                req.result = cached
+                req.t_done = req.t_arrival
+                st.store_hits += 1
+                st.latencies.append(0.0)
+                self.delivered.append(req.rid)
+                return
         q = self._queues[s].setdefault(concept, [])
+        if self.queue_limit is not None and len(q) >= self.queue_limit:
+            # admission control: the queue is bounded — shed with a
+            # typed result; under the 'degrade' policy, also step the
+            # ladder down so FUTURE flushes get cheaper
+            if self.overload == "degrade":
+                ctl = self._ctl[concept]
+                if ctl is not None and ctl.force_down():
+                    st.degrade_steps += 1
+            self._finish_rejected([req], concept, Shed("queue-full"))
+            return
         q.append(req)
+        depth = self._concept_depth(concept)
+        if depth > st.depth_max:
+            st.depth_max = depth
         if len(q) == 1:
             self.wheel.schedule((s, concept),
                                 req.t_arrival + self.max_wait_s)
@@ -273,25 +452,94 @@ class AsyncCascadeService:
             self._flush(s, concept, "size")
 
     def poll(self) -> None:
-        """Fire due deadlines, then harvest any finished batches without
-        blocking on in-flight device compute."""
+        """Expire over-deadline queued requests, fire due flush
+        deadlines, recover timed-out batches, then harvest any finished
+        batches without blocking on in-flight device compute."""
         now = self.clock()
+        self._expire_requests(now)
         for s, concept in self.wheel.pop_due(now):
             if self._queues[s].get(concept):
                 self._flush(s, concept, "deadline")
+        self._check_batch_timeouts(now)
         self.deliver_ready()
 
     def drain(self) -> None:
-        """Flush every queue and deliver every in-flight batch."""
+        """Flush every queue and deliver every in-flight batch. With a
+        ``batch_timeout_s`` configured, an expired in-flight batch is
+        recovered (retry on a healthy device, else TimedOut) instead of
+        blocked on — a dead device can no longer hang drain()."""
         for s in range(self.n_shards):
             for concept in list(self._queues[s]):
                 while self._queues[s][concept]:
                     self._flush(s, concept, "drain")
-        for dev in list(self._inflight):
-            self._deliver(dev)
+        while self._inflight:
+            for dev in list(self._inflight):
+                inf = self._inflight.get(dev)
+                if inf is None:
+                    continue
+                if self._batch_timed_out(inf):
+                    self._recover_batch(dev)
+                else:
+                    # blocks until the device finishes — the production
+                    # path; a NeverReady label without a configured
+                    # timeout raises loudly instead of hanging
+                    self._deliver(dev)
 
     # ----------------------------------------------------- flush/deliver --
+    def _concept_depth(self, concept: str) -> int:
+        return sum(len(self._queues[s].get(concept, ()))
+                   for s in range(self.n_shards))
+
+    def _queued_total(self) -> int:
+        return sum(len(q) for qs in self._queues for q in qs.values())
+
+    def _expire_requests(self, now: float) -> None:
+        if self.request_deadline_s is None:
+            return
+        for s in range(self.n_shards):
+            for concept, q in self._queues[s].items():
+                expired = []
+                while q and now - q[0].t_arrival > self.request_deadline_s:
+                    expired.append(q.pop(0))
+                if not expired:
+                    continue
+                self._finish_rejected(expired, concept,
+                                      TimedOut("request-deadline"))
+                key = (s, concept)
+                self.wheel.cancel(key)
+                if q:                     # new head keeps its deadline
+                    self.wheel.schedule(key,
+                                        q[0].t_arrival + self.max_wait_s)
+
+    def _finish_rejected(self, reqs: list, concept: str, result) -> None:
+        """Complete requests with a typed non-label result — the only
+        exits besides a real label; nothing is left pending forever."""
+        st = self.stats[concept]
+        now = self.clock()
+        for req in reqs:
+            req.result = result
+            req.t_done = now
+            self.delivered.append(req.rid)
+        if isinstance(result, Shed):
+            st.shed += len(reqs)
+        elif result.reason == "request-deadline":
+            st.expired += len(reqs)
+        else:
+            st.timeouts += len(reqs)
+
     def _flush(self, s: int, concept: str, reason: str) -> None:
+        st = self.stats[concept]
+        ctl = self._ctl[concept]
+        if ctl is not None:
+            # load control observes at flush time: backlog across the
+            # concept's shards + the latency of the last delivered flush
+            before = ctl.level
+            level = ctl.observe(self._concept_depth(concept),
+                                self._last_flush_lat.get(concept))
+            if level > before:
+                st.degrade_steps += 1
+            elif level < before:
+                st.recover_steps += 1
         q = self._queues[s][concept]
         take, self._queues[s][concept] = \
             q[:self.batch_size], q[self.batch_size:]
@@ -300,21 +548,19 @@ class AsyncCascadeService:
         rest = self._queues[s][concept]
         if rest:                           # new head keeps its deadline
             self.wheel.schedule(key, rest[0].t_arrival + self.max_wait_s)
-        st = self.stats[concept]
         setattr(st, f"{reason}_flushes",
                 getattr(st, f"{reason}_flushes") + 1)
         self._dispatch(s, concept, take)
 
-    def _dispatch(self, s: int, concept: str, take: list) -> None:
-        casc = self.cascades[concept]
+    def _dispatch(self, s: int, concept: str, take: list,
+                  casc: CompiledCascade | None = None,
+                  retries: int = 0, count_rows: bool = True) -> None:
+        casc = casc if casc is not None else self._active_cascade(concept)
         st = self.stats[concept]
         nv = len(take)
         width = slab_width(nv, self.batch_size)
         rows = np.array([int(r.payload) for r in take], np.int64)
         rows_p = pad_rows(rows, width)
-        dev = self.devices[s]
-        if dev in self._inflight:          # one in-flight batch per device
-            self._deliver(dev)
 
         base_hw = self.images.shape[1]
         small = [r for r in casc.resolutions if r != base_hw]
@@ -323,56 +569,161 @@ class AsyncCascadeService:
         # pad the gathered blocks to slab width
         cached = (self.repcache.lookup_rows(rows, small)
                   if self.repcache is not None and small else None)
-        if cached is not None:
-            pyr = {r: (np.concatenate(
-                           [v, np.repeat(v[-1:], width - nv, axis=0)])
-                       if width > nv else v)
-                   for r, v in cached.items()}
-            if base_hw in casc.resolutions:
-                pyr[base_hw] = self.images[rows_p]
-            labels = self._fn(concept, width, "pyr")(
-                {r: self._commit(v, dev) for r, v in pyr.items()})
-            levels = None
-            st.rep_hit_rows += nv
-        else:
-            labels, levels = self._fn(concept, width, "base")(
-                self._commit(self.images[rows_p], dev))
+
+        attempts = 0
+        while True:
+            dev = self._device_for(s)
+            if dev is None:                # every device failed
+                self._finish_rejected(take, concept,
+                                      Shed("no-healthy-device"))
+                return
+            if dev in self._inflight:      # one in-flight batch per device
+                if self._batch_timed_out(self._inflight[dev]):
+                    self._recover_batch(dev)
+                    if self._dev_index[dev] in self._failed:
+                        continue           # recovery failed it: re-pick
+                else:
+                    self._deliver(dev)
+            try:
+                if self.faults is not None:
+                    self.faults.on_dispatch(self._dev_index[dev])
+                if cached is not None:
+                    pyr = {r: (np.concatenate(
+                                   [v, np.repeat(v[-1:], width - nv,
+                                                 axis=0)])
+                               if width > nv else v)
+                           for r, v in cached.items()}
+                    if base_hw in casc.resolutions:
+                        pyr[base_hw] = self.images[rows_p]
+                    labels = self._fn(casc, width, "pyr")(
+                        {r: self._commit(v, dev) for r, v in pyr.items()})
+                    levels = None
+                else:
+                    labels, levels = self._fn(casc, width, "base")(
+                        self._commit(self.images[rows_p], dev))
+            except (DeviceError, TransientComputeError) as e:
+                attempts += 1
+                st.retries += 1
+                if isinstance(e, DeviceError):
+                    # dispatch-time device failure: fail the device so
+                    # every future dispatch re-routes around it
+                    self._failed.add(self._dev_index[dev])
+                if attempts > self.dispatch_retries:
+                    self._finish_rejected(take, concept,
+                                          Shed("dispatch-failed"))
+                    return
+                continue
+            break
+
+        if self.faults is not None:
+            labels = self.faults.wrap_labels(labels,
+                                             self._dev_index[dev])
         st.batches += 1
-        st.rows_evaluated += nv
-        st.padded_slots += width - nv
-        self._inflight[dev] = _InFlight(s, concept, take, rows, labels,
-                                        levels)
+        if count_rows:
+            st.rows_evaluated += nv
+            st.padded_slots += width - nv
+            if cached is not None:
+                st.rep_hit_rows += nv
+        self._inflight[dev] = _InFlight(s, concept, casc, take, rows,
+                                        labels, levels,
+                                        t_dispatch=self.clock(),
+                                        retries=retries)
+        if len(self._inflight) > self._inflight_max:
+            self._inflight_max = len(self._inflight)
+
+    def _ready(self, labels) -> bool:
+        return not hasattr(labels, "is_ready") or labels.is_ready()
+
+    def _batch_timed_out(self, inf: _InFlight) -> bool:
+        return (self.batch_timeout_s is not None
+                and not self._ready(inf.labels)
+                and self.clock() - inf.t_dispatch > self.batch_timeout_s)
+
+    def _check_batch_timeouts(self, now: float) -> None:
+        if self.batch_timeout_s is None:
+            return
+        for dev in list(self._inflight):
+            inf = self._inflight.get(dev)
+            if inf is not None and self._batch_timed_out(inf):
+                self._recover_batch(dev)
+
+    def _recover_batch(self, dev) -> None:
+        """A timed-out in-flight batch: fail its device, then re-route
+        to a healthy one (bounded by ``dispatch_retries``) or complete
+        its requests with a typed ``TimedOut``. Re-dispatch re-runs the
+        SAME rung, so labels stay identical to an un-faulted run."""
+        inf = self._inflight.pop(dev)
+        self._failed.add(self._dev_index[dev])
+        st = self.stats[inf.concept]
+        if (inf.retries < self.dispatch_retries
+                and self._device_for(inf.shard) is not None):
+            st.retries += 1
+            self._dispatch(inf.shard, inf.concept, inf.take,
+                           casc=inf.casc, retries=inf.retries + 1,
+                           count_rows=False)
+        else:
+            self._finish_rejected(inf.take, inf.concept,
+                                  TimedOut("batch-timeout"))
 
     def deliver_ready(self) -> None:
         """Deliver finished in-flight batches; leave running ones in
         flight (the dispatch-ahead overlap window)."""
         for dev in list(self._inflight):
-            lab = self._inflight[dev].labels
-            if not hasattr(lab, "is_ready") or lab.is_ready():
+            if self._ready(self._inflight[dev].labels):
                 self._deliver(dev)
 
     def _deliver(self, dev) -> None:
         inf = self._inflight.pop(dev, None)
         if inf is None:
             return
-        casc = self.cascades[inf.concept]
+        casc = inf.casc
         nv = len(inf.take)
         labels = np.asarray(inf.labels)[:nv]    # deferred sync happens here
         sstore = self._shard_stores[inf.shard]
         sstore.record(casc.key, inf.rows, labels)
         # post-flush commit: shard-store merge semantics restricted to
-        # the delivered rows (O(batch), not O(corpus), per delivery)
+        # the delivered rows (O(batch), not O(corpus), per delivery) —
+        # a degraded rung commits under its OWN casc.key, so degraded
+        # labels can never poison the primary's virtual column
         self.store.merge_rows_from(sstore, inf.rows)
         if inf.levels is not None and self.repcache is not None:
             for r, v in inf.levels.items():
                 self.repcache.put_rows(inf.rows, r, np.asarray(v)[:nv])
         now = self.clock()
         st = self.stats[inf.concept]
+        if casc is not self._ladder[inf.concept][0]:
+            st.degraded_rows += nv
+            st.degraded_batches += 1
+        self._last_flush_lat[inf.concept] = now - inf.t_dispatch
         for req, lab in zip(inf.take, labels):
             req.result = int(lab)
             req.t_done = now
             st.latencies.append(now - req.t_arrival)
             self.delivered.append(req.rid)
+
+    # --------------------------------------------------- host interface --
+    def next_event_time(self) -> float | None:
+        """Earliest instant at which time-driven work comes due: a flush
+        deadline, a batch timeout, or a request deadline. None when no
+        timed work is pending — the event host (serve/host.py) sleeps
+        exactly until this."""
+        cands = []
+        nd = self.wheel.next_deadline()
+        if nd is not None:
+            cands.append(nd)
+        if self.batch_timeout_s is not None:
+            cands.extend(inf.t_dispatch + self.batch_timeout_s
+                         for inf in self._inflight.values())
+        if self.request_deadline_s is not None:
+            cands.extend(q[0].t_arrival + self.request_deadline_s
+                         for qs in self._queues
+                         for q in qs.values() if q)
+        return min(cands, default=None)
+
+    def busy(self) -> bool:
+        """True while any request is queued or any batch is in flight."""
+        return bool(self._inflight) or any(
+            q for qs in self._queues for q in qs.values())
 
     # ------------------------------------------------------------- stats --
     def latencies(self) -> list:
@@ -386,11 +737,38 @@ class AsyncCascadeService:
                for k in ("requests", "store_hits", "rep_hit_rows",
                          "rows_evaluated", "batches", "padded_slots",
                          "size_flushes", "deadline_flushes",
-                         "drain_flushes")}
+                         "drain_flushes", "shed", "expired", "timeouts",
+                         "retries", "degraded_rows", "degraded_batches",
+                         "degrade_steps", "recover_steps")}
         agg["shards"] = self.n_shards
         agg["devices"] = len(set(self.devices))
         agg["store_hit_rate"] = (agg["store_hits"] / agg["requests"]
                                  if agg["requests"] else 0.0)
+        agg["goodput_requests"] = (agg["requests"] - agg["shed"]
+                                   - agg["expired"] - agg["timeouts"])
+        agg["degraded_fraction"] = (agg["degraded_rows"] / agg["requests"]
+                                    if agg["requests"] else 0.0)
+        # gauges (current + high-water): queue depth, in-flight batches
+        agg["queue_depth"] = {
+            "current": self._queued_total(),
+            "max": max((st.depth_max for st in self.stats.values()),
+                       default=0)}
+        agg["in_flight"] = {"current": len(self._inflight),
+                            "max": self._inflight_max}
+        agg["failed_devices"] = sorted(self._failed)
+        agg["active_levels"] = {c: self.active_level(c)
+                                for c in self.cascades}
+        lat = self.latencies()
+        if lat:
+            ms = np.asarray(lat, np.float64) * 1e3
+            agg["latency_ms"] = {
+                "p50": round(float(np.percentile(ms, 50)), 3),
+                "p95": round(float(np.percentile(ms, 95)), 3),
+                "p99": round(float(np.percentile(ms, 99)), 3)}
+        else:
+            agg["latency_ms"] = None
         if self.repcache is not None:
             agg["repcache"] = self.repcache.stats()
+        if self.faults is not None:
+            agg["faults_injected"] = dict(self.faults.injected)
         return agg

@@ -29,6 +29,52 @@ except ImportError:
     _hypothesis_shim.install()
 
 
+# ---------------------------------------------------------------------------
+# Per-test wall-clock ceiling (pytest-timeout style, stdlib-only). The
+# overload/fault suite's whole point is that nothing hangs — a regression
+# there would otherwise wedge CI instead of failing it. Enabled by setting
+# REPRO_TEST_TIMEOUT_S (the CI workflow exports it); a `timeout` marker
+# overrides the budget per test. SIGALRM only exists on the main thread of
+# Unix platforms, so the hook degrades to a no-op anywhere else — if the
+# real pytest-timeout plugin is installed, it takes over and this stays out
+# of the way.
+_TIMEOUT_S = float(os.environ.get("REPRO_TEST_TIMEOUT_S", 0) or 0)
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_call(item):
+    import signal
+    import threading
+    budget = _TIMEOUT_S
+    m = item.get_closest_marker("timeout")
+    if m is not None and m.args:
+        budget = float(m.args[0])
+    use = (budget > 0 and hasattr(signal, "SIGALRM")
+           and threading.current_thread() is threading.main_thread()
+           and not item.config.pluginmanager.hasplugin("timeout"))
+    if not use:
+        yield
+        return
+
+    def _expire(signum, frame):
+        pytest.fail(f"test exceeded the {budget:.0f}s per-test ceiling "
+                    "(REPRO_TEST_TIMEOUT_S)", pytrace=False)
+
+    prev = signal.signal(signal.SIGALRM, _expire)
+    signal.setitimer(signal.ITIMER_REAL, budget)
+    try:
+        yield
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0)
+        signal.signal(signal.SIGALRM, prev)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "timeout(seconds): per-test wall-clock ceiling "
+        "(active when REPRO_TEST_TIMEOUT_S is set)")
+
+
 def pytest_collection_modifyitems(config, items):
     """Auto-skip ``multidevice`` tests when the flag didn't take (jax was
     already imported, or the operator forced a 1-device count) — the
