@@ -1,0 +1,459 @@
+"""Fused pyramid+stage-0 hot path benchmark (DESIGN.md §13): the 2x2
+grid of {eager, lazy} level materialization x {unfused, fused} chunk
+ingest, per-chunk hot-path wall time and per-level materialization
+counters. Writes ``BENCH_fused_scan.json`` at the repo root.
+
+  PYTHONPATH=src python -m benchmarks.bench_fused_hotpath [--quick]
+
+Two sections:
+
+* ``planned`` — the trained 3-predicate query through the joint
+  planner, exactly like bench_query_engine: integration truth (row
+  sets, counters, EXPLAIN) on whatever plan the optimizer picks. At
+  the repo's reduced 32px base the hw=32 CNN compute dominates and the
+  planner often picks base-only cascades, so this section is NOT where
+  the hot-path mechanism shows — it pins exactness.
+* ``hotpath_stress`` — the HEADLINE per-chunk measurement: the same
+  engines end-to-end on a 3-predicate multi-level cascade layout
+  (stage-0 at {16,8} gray, predicate 2 first-touching {hw/2}) over a
+  256px dyadic corpus at the 2304-row config — the
+  data-handling-bound, paper-resolution regime (Tahoma's corpora are
+  224px-class). Models are real CNN forward passes
+  (`models/cnn.init_cnn`); weights are synthetic but
+  logit-standardized against a probe batch (see ``_stress_cascades``)
+  so predicate 1 is a realistic rare-concept filter with a nonzero
+  survivor stream and result set. Synthetic weights change labels but
+  not the data movement or program structure being measured, and
+  every exactness differential (naive reference, shards {1,8},
+  counter/schedule agreement) still applies verbatim. Timed repeats
+  are round-robined across the four configs so shared-box load bursts
+  don't bias any one cell.
+
+Also checked/recorded, per the §13 acceptance list:
+* row sets bit-identical across all four configs, the naive reference,
+  and the sharded engine at ``--shards`` counts (default 1,8);
+* the engine-costing contract: the ``level_schedule`` first-touch
+  prediction (``PhysicalPlan.materialization_schedule`` on the planned
+  section) matches the measured ``ScanStats.level_rows`` counters
+  EXACTLY on a cold scan;
+* kernel-vs-reference stage-0 labels (interpret-mode Pallas vs the
+  unfused jnp composition) — a mismatch exits nonzero (the CI gate);
+* int8-vs-f32 stage-0 score deviation, pinned to
+  ``benchmarks/calibrated_int8_stage0.json`` (written if missing, or
+  with ``--recalibrate``) — the tolerance tests and serving admit
+  against.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+# the sharded differential simulates a multi-chip host; must land before
+# the repro imports below pull jax in
+from repro.launch.devsim import force_host_devices  # noqa: E402
+
+force_host_devices(8)
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs.base import TahomaCNNConfig                     # noqa: E402
+from repro.core.executor import Stage0, make_fused_ingest          # noqa: E402
+from repro.core.transforms import (Representation,                 # noqa: E402
+                                   apply_transform)
+from repro.data.synthetic import DEFAULT_PREDICATES, make_multi_corpus  # noqa: E402
+from repro.engine import (PredicateClause, QuerySpec, ScanEngine,  # noqa: E402
+                          ShardedScanEngine, naive_scan, plan_query)
+from repro.engine.scan import CompiledCascade, level_schedule      # noqa: E402
+from repro.kernels.image_transform import fused_pyramid_stage0     # noqa: E402
+from repro.models.cnn import (cnn_forward, cnn_predict_proba,      # noqa: E402
+                              init_cnn, quantize_cnn)
+
+from benchmarks.bench_query_engine import build_systems            # noqa: E402
+
+ROOT = Path(__file__).resolve().parents[1]
+OUT = ROOT / "BENCH_fused_scan.json"
+QUICK_DIR = ROOT / "artifacts" / "bench"
+CALIBRATION = Path(__file__).resolve().parent / \
+    "calibrated_int8_stage0.json"
+# safety margin over the measured deviation: int8 rounding error varies
+# with the drawn weights, and the pinned tolerance must hold for future
+# trained models, not just the calibration run's
+CAL_MARGIN = 4.0
+CAL_FLOOR = 5e-3
+
+
+def _time(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def _plan(systems, specs, metadata):
+    for floor in (0.8, None):
+        spec_q = QuerySpec(
+            metadata_eq={"cam": 0},
+            predicates=[PredicateClause(s.name, min_accuracy=floor)
+                        for s in specs])
+        try:
+            return plan_query(systems, spec_q, scenario="CAMERA",
+                              metadata=metadata, joint=True,
+                              costing="engine")
+        except ValueError:
+            print(f"[bench] no cascade clears min_accuracy={floor}; "
+                  f"relaxing")
+    raise SystemExit("planning failed even unconstrained")
+
+
+def check_kernel_labels(cascades, images, chunk: int) -> dict:
+    """The CI gate: interpret-mode Pallas kernel ingest vs the unfused
+    jnp composition must produce IDENTICAL stage-0 labels on a real
+    chunk. Returns the comparison record; the caller exits nonzero on
+    mismatch."""
+    casc = next((c for c in cascades if c.stage0 is not None), None)
+    if casc is None:
+        return {"checked": False, "reason": "no stage0 cascade in plan"}
+    imgs = jnp.asarray(images[:chunk])
+    caps = [chunk] * (len(casc.model_fns) - 1)
+    out_res = tuple(r for r in casc.resolutions
+                    if r != images.shape[1])
+    mk = lambda uk: make_fused_ingest(  # noqa: E731
+        casc.model_fns, casc.thresholds, casc.reps, caps, out_res,
+        stage0=casc.stage0, use_kernel=uk, jit=False)
+    lab_k, lev_k = mk(True)(imgs)    # Pallas (interpret off-TPU)
+    lab_r, lev_r = mk(False)(imgs)   # unfused reference composition
+    labels_equal = bool(np.array_equal(np.asarray(lab_k),
+                                       np.asarray(lab_r)))
+    levels_equal = all(
+        np.array_equal(np.asarray(lev_k[r]), np.asarray(lev_r[r]))
+        for r in out_res)
+    return {"checked": True, "concept": casc.concept,
+            "rows": int(chunk), "labels_identical": labels_equal,
+            "levels_bit_identical": bool(levels_equal)}
+
+
+def calibrate_int8(cascades, images, chunk: int,
+                   recalibrate: bool) -> dict:
+    """Measure the int8-vs-f32 stage-0 score deviation on a real chunk
+    for every planned stage-0 model; pin the tolerance (measured max x
+    CAL_MARGIN, floored at CAL_FLOOR) to calibrated_int8_stage0.json
+    if missing or --recalibrate."""
+    imgs = jnp.asarray(images[:chunk])
+    base = images.shape[1]
+    per = {}
+    for casc in cascades:
+        s0 = casc.stage0
+        if s0 is None or s0.qparams is None:
+            continue
+        out_res = [r for r in casc.resolutions if r != base]
+        _, f32 = fused_pyramid_stage0(imgs, out_res, s0.params, s0.rep)
+        _, i8 = fused_pyramid_stage0(imgs, out_res, s0.params, s0.rep,
+                                     qparams=s0.qparams)
+        per[casc.concept] = float(np.max(np.abs(
+            np.asarray(i8) - np.asarray(f32))))
+    measured = max(per.values()) if per else 0.0
+    if CALIBRATION.exists() and not recalibrate:
+        cal = json.loads(CALIBRATION.read_text())
+    else:
+        cal = {"score_abs_tol": max(measured * CAL_MARGIN, CAL_FLOOR),
+               "measured_max_abs_dev": measured,
+               "margin_x": CAL_MARGIN,
+               "per_concept": per}
+        CALIBRATION.write_text(json.dumps(cal, indent=2) + "\n")
+        print(f"[bench] wrote {CALIBRATION}")
+    return {"measured_max_abs_dev": measured,
+            "per_concept": per,
+            "pinned_tol": cal["score_abs_tol"],
+            "within_pinned_tol": measured <= cal["score_abs_tol"]}
+
+
+_TARGET_LOGIT_STD = 4.0
+
+
+def _stress_cascades(hw: int, probe, s1_rate: float = 0.02):
+    """3-predicate multi-level layout over real (randomly initialized)
+    CNNs: stage-0 a 2-level cheap cascade at {16,8} gray, predicate 2
+    first-touching {hw/2} (plus a base-level tail), predicate 3
+    first-touching {16}-shared + base. Lazy schedule: ingest {16,8},
+    later stages derive {hw/2} at first touch; eager materializes
+    {hw/2,16,8} for every scanned row. Stage0 carries params + int8
+    qparams, so the fused engines take the same code paths the
+    planner's cascades do.
+
+    A freshly initialized CNN is a degenerate one-class labeler (its
+    logits saturate on one side of every threshold), which would empty
+    the survivor stream after predicate 1 and make the row-set
+    differentials trivially empty-vs-empty. Each model's output layer
+    is therefore rescaled against ``probe`` so its logit distribution
+    straddles the stage threshold: stage-0 of predicate 1 labels
+    ``s1_rate`` of rows true (~2% by default — the selective
+    rare-concept regime the paper's cascades target), later stages
+    ~50%, giving a realistic selective scan with a nonzero result set
+    and survivors that actually first-touch the lazy {hw/2} level."""
+    def model(res, color, conv=8, dense=16, seed=0):
+        cfg = TahomaCNNConfig(1, conv, dense, input_hw=res,
+                              input_channels=1 if color != "rgb" else 3)
+        return init_cnn(jax.random.PRNGKey(seed + res), cfg)
+
+    def standardize(params, rep, true_rate, threshold_logit):
+        # logits are linear in the output layer: z' = k(z - mean) + mu
+        # is exactly out_w *= k, out_b -> k*out_b + (mu - k*mean)
+        x = apply_transform(probe, rep)
+        z = np.asarray(cnn_forward(params, x)).ravel()
+        k = _TARGET_LOGIT_STD / max(float(z.std()), 1e-6)
+        zc = k * (z - float(z.mean()))
+        mu = threshold_logit - float(np.quantile(zc, 1.0 - true_rate))
+        params["out_w"] = params["out_w"] * k
+        params["out_b"] = params["out_b"] * k + (
+            mu - k * float(np.mean(z)))
+
+    def casc(concept, seed, spec, thresholds, cost_s, sel, rates,
+             conv=8, dense=16):
+        reps = [Representation(r, c) for r, c in spec]
+        params = [model(r, c, conv=conv, dense=dense, seed=seed)
+                  for r, c in spec]
+        for p, rep, (_, hi), q in zip(params, reps, thresholds, rates):
+            thr = 0.0 if hi is None else float(np.log(hi / (1.0 - hi)))
+            standardize(p, rep, q, thr)
+        fns = [(lambda x, p=p: cnn_predict_proba(p, x)) for p in params]
+        s0 = Stage0(params=params[0], rep=reps[0],
+                    qparams=quantize_cnn(params[0]))
+        return CompiledCascade(concept, ("stress", seed), reps, fns,
+                               list(thresholds), cost_s=cost_s,
+                               selectivity=sel, stage0=s0)
+
+    # predicate 1 is a rare-concept filter (~4% true — the selective
+    # regime the paper's cascades target), so predicates 2/3 see a thin
+    # survivor stream; their models are deliberately small because the
+    # engine classifies the full chunk width whenever a chunk has any
+    # survivor, and the quantity under test is the per-chunk
+    # ingest/materialization path, not later-stage CNN throughput.
+    return [
+        casc("s1", 1, [(16, "gray"), (8, "gray")],
+             [(0.45, 0.55), (None, None)], 1e-4, 0.5, [s1_rate, 0.5]),
+        casc("s2", 2, [(hw // 2, "gray"), (hw, "rgb")],
+             [(0.45, 0.55), (None, None)], 2e-4, 0.5, [0.5, 0.5],
+             conv=2, dense=8),
+        casc("s3", 3, [(16, "gray"), (hw, "rgb")],
+             [(0.45, 0.55), (None, None)], 2e-4, 0.5, [0.5, 0.5],
+             conv=2, dense=8),
+    ]
+
+
+def bench_grid(cascades, metadata_eq, qx, metadata, chunk: int,
+               repeats: int, sched, est=None, log=print) -> dict:
+    """The 2x2 {eager,lazy} x {unfused,fused} grid on one corpus. Every
+    config's row set must equal the naive reference; per-chunk hot-path
+    time is cold-scan wall time / ingest chunks. ``sched`` is the
+    first-touch schedule {resolution: stage} the lazy counters must
+    match exactly."""
+    ref = naive_scan(qx, cascades, metadata, metadata_eq, chunk=chunk)
+    configs = [(f"{'lazy' if lazy else 'eager'}_"
+                f"{'fused' if fused else 'unfused'}", lazy, fused)
+               for lazy in (False, True) for fused in (False, True)]
+    engines, results, times = {}, {}, {}
+    for name, lazy, fused in configs:
+        eng = ScanEngine(qx, metadata, chunk=chunk, lazy=lazy,
+                         fused=fused)
+        results[name] = eng.execute(cascades, metadata_eq)     # warm
+        engines[name] = eng
+        times[name] = []
+    # round-robin the timed repeats so a transient load burst (shared
+    # single-core box) lands on every config, not whichever one was
+    # running; per-config min then discards the burst entirely
+    for _ in range(repeats):
+        for name, _, _ in configs:
+            eng = engines[name]
+            times[name].append(_time(lambda e=eng: (
+                e.reset_cache(), e.execute(cascades, metadata_eq))))
+    grid = {}
+    for name, _, _ in configs:
+        res, t = results[name], min(times[name])
+        nchunks = max(res.stats.chunks, 1)
+        grid[name] = {
+            "scan_s": round(t, 4),
+            "chunks": int(res.stats.chunks),
+            "per_chunk_ms": round(t / nchunks * 1e3, 3),
+            "levels_materialized_rows": {
+                str(r): int(n)
+                for r, n in sorted(res.stats.level_rows.items())},
+            "level_rows_total": int(sum(
+                res.stats.level_rows.values())),
+            "identical_rows": bool(np.array_equal(res.indices, ref)),
+        }
+        log(f"  {name}: {t:.3f}s "
+            f"({grid[name]['per_chunk_ms']}ms/chunk, "
+            f"{grid[name]['level_rows_total']} level-rows)")
+    stats = results["lazy_fused"].stats
+    # engine-costing contract on the lazy engine: measured counters ==
+    # the first-touch schedule, exactly
+    want = {r: (stats.rows_scanned if s == 0
+                else stats.stages[s].rows_evaluated)
+            for r, s in sched.items()}
+    # a derive level whose owning stage never saw a survivor is
+    # (correctly) never built: zero predicted touches match an absent
+    # counter
+    exact = ({r: v for r, v in want.items() if v}
+             == {r: v for r, v in stats.level_rows.items() if v})
+    hot = grid["eager_unfused"]["per_chunk_ms"] \
+        / grid["lazy_fused"]["per_chunk_ms"]
+    out = {
+        "grid": grid,
+        "hotpath_speedup_x": round(hot, 2),
+        "lazy_level_rows_saved_x": round(
+            grid["eager_unfused"]["level_rows_total"]
+            / max(grid["lazy_fused"]["level_rows_total"], 1), 2),
+        "schedule": {str(r): ("ingest" if s == 0 else f"stage{s + 1}")
+                     for r, s in sorted(sched.items())},
+        "measured_level_rows": {str(r): int(n) for r, n
+                                in sorted(stats.level_rows.items())},
+        "estimate_matches_measured_exactly": bool(exact),
+    }
+    if est is not None:
+        out["estimated_level_rows"] = {str(r): round(v, 1)
+                                       for r, v in sorted(est.items())}
+    return out
+
+
+def _schedule_of(cascades, base_hw: int) -> dict:
+    ingest, _, derive = level_schedule(cascades, base_hw, True)
+    sched = {r: 0 for r in ingest}
+    for s, levels in enumerate(derive):
+        for r in levels:
+            sched[r] = s
+    return sched
+
+
+def bench_sharded_differential(cascades, metadata_eq, qx, metadata,
+                               chunk: int, shard_counts,
+                               log=print) -> list:
+    """Lazy+fused sharded engines vs the serial engine: bit-identical
+    row sets and (cold-scan) identical cross-shard level counters."""
+    ref = ScanEngine(qx, metadata, chunk=chunk).execute(
+        cascades, metadata_eq)
+    out = []
+    for k in shard_counts:
+        eng = ShardedScanEngine(qx, metadata, shards=k, chunk=chunk)
+        res = eng.execute(cascades, metadata_eq)
+        entry = {
+            "shards": k,
+            "identical_rows": bool(np.array_equal(res.indices,
+                                                  ref.indices)),
+            "level_rows_match_serial": bool(
+                res.stats.level_rows == ref.stats.level_rows),
+        }
+        out.append(entry)
+        log(f"  shards={k}: identical={entry['identical_rows']}, "
+            f"counters match={entry['level_rows_match_serial']}")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller corpora/training (CI smoke)")
+    ap.add_argument("--shards", default="1,8",
+                    help="shard counts for the sharded differential")
+    ap.add_argument("--chunk", type=int, default=64)
+    ap.add_argument("--recalibrate", action="store_true",
+                    help="re-measure and rewrite "
+                         "benchmarks/calibrated_int8_stage0.json")
+    args = ap.parse_args()
+
+    specs = DEFAULT_PREDICATES[:3]
+    sizes = (256,) if args.quick else (768, 2304)
+    repeats = 2 if args.quick else 3
+    systems = build_systems(specs, steps=30 if args.quick else 60,
+                            n_train=160 if args.quick else 240, hw=32)
+
+    qx, _ = make_multi_corpus(specs, sizes[-1], hw=32, seed=7,
+                              positive_rate=0.4)
+    metadata_full = {"cam": np.arange(sizes[-1]) % 2}
+    plan = _plan(systems, specs, metadata_full)
+
+    kernel = check_kernel_labels(plan.cascades, qx, args.chunk)
+    print(f"[bench] kernel-vs-ref: {kernel}")
+    int8 = calibrate_int8(plan.cascades, qx, args.chunk,
+                          args.recalibrate)
+    print(f"[bench] int8 deviation {int8['measured_max_abs_dev']:.2e} "
+          f"(pinned tol {int8['pinned_tol']:.2e})")
+
+    shard_counts = [int(s) for s in args.shards.split(",")]
+    base_hw = qx.shape[1]
+    corpora = []
+    for n in sizes:
+        metadata = {"cam": np.arange(n) % 2}
+        print(f"[bench] planned rows={n}")
+        entry = {"rows": n, "chunk": args.chunk}
+        entry.update(bench_grid(
+            plan.cascades, plan.metadata_eq, qx[:n], metadata,
+            args.chunk, repeats, plan.materialization_schedule(base_hw),
+            est=plan.expected_level_rows(n // 2, base_hw)))
+        entry["sharded"] = bench_sharded_differential(
+            plan.cascades, plan.metadata_eq, qx[:n], metadata,
+            args.chunk, shard_counts)
+        corpora.append(entry)
+    print(plan.explain(n_rows=sizes[-1], base_hw=base_hw))
+
+    # headline: the data-handling-bound stress layout at the largest
+    # config (64px dyadic corpus; 32px in --quick)
+    stress_hw = 32 if args.quick else 256
+    stress_n = sizes[-1]
+    rng = np.random.default_rng(11)
+    sx = (rng.integers(0, 256, (stress_n, stress_hw, stress_hw, 3))
+          .astype(np.float32) / 256.0)
+    smeta = {"cam": np.arange(stress_n) % 2}
+    scascades = _stress_cascades(stress_hw, sx[:128])
+    print(f"[bench] hotpath stress rows={stress_n} hw={stress_hw}")
+    stress = {"rows": stress_n, "base_hw": stress_hw,
+              "chunk": args.chunk}
+    stress.update(bench_grid(scascades, {"cam": 0}, sx, smeta,
+                             args.chunk, repeats + 2,
+                             _schedule_of(scascades, stress_hw)))
+    stress["sharded"] = bench_sharded_differential(
+        scascades, {"cam": 0}, sx, smeta, args.chunk, shard_counts)
+
+    report = {
+        "backend": jax.default_backend(),
+        "devices": jax.device_count(),
+        "query": "SELECT frames WHERE cam=0 AND "
+                 + " AND ".join(f"contains({s.name})" for s in specs),
+        "costing": plan.costing,
+        "kernel_check": kernel,
+        "int8": int8,
+        "planned": corpora,
+        "hotpath_stress": stress,
+        "hotpath_speedup_x": stress["hotpath_speedup_x"],
+        "all_identical": all(
+            all(g["identical_rows"] for g in c["grid"].values())
+            and all(s["identical_rows"] for s in c["sharded"])
+            for c in corpora + [stress]),
+        "estimate_matches_measured_exactly": all(
+            c["estimate_matches_measured_exactly"]
+            for c in corpora + [stress]),
+    }
+    if args.quick:
+        QUICK_DIR.mkdir(parents=True, exist_ok=True)
+        out = QUICK_DIR / "BENCH_fused_scan.quick.json"
+    else:
+        out = OUT
+    out.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"wrote {out}  (hot-path {report['hotpath_speedup_x']}x, "
+          f"identical={report['all_identical']}, exact-match="
+          f"{report['estimate_matches_measured_exactly']})")
+    if kernel.get("checked") and not (kernel["labels_identical"]
+                                      and kernel["levels_bit_identical"]):
+        raise SystemExit("kernel-vs-reference label mismatch")
+    if not report["all_identical"]:
+        raise SystemExit("row-set divergence")
+
+
+if __name__ == "__main__":
+    main()

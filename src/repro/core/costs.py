@@ -202,7 +202,12 @@ def decompose_cascade_cost(levels, scores_eval, reps, infer_s,
     cascade for every row; reach-weighted §VI costing systematically
     undercharges multi-level cascades there. The joint planner uses
     this mode by default (engine/planner.plan_query costing='engine')
-    because the plan it emits is executed by exactly those paths."""
+    because the plan it emits is executed by exactly those paths.
+    NOTE: this is WITHIN-cascade pricing (a flushed batch runs every
+    level of its own cascade full-width); it is orthogonal to the
+    CROSS-predicate rep-charge weighting (joint_scan_cost dense_reps),
+    where the engines' lazy first-touch schedule means a later
+    predicate's levels are only pooled for rows surviving to it."""
     import numpy as np
 
     s = np.asarray(scores_eval)

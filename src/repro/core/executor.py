@@ -28,13 +28,15 @@ representation tensor (already transformed) to probabilistic scores.
 """
 from __future__ import annotations
 
-from typing import Callable, Sequence
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.transforms import (Representation, color_transform,
-                                   resize_area)
+                                   materialize_pyramid, resize_area)
 
 
 def derivation_sources(res_seq: list[int], base: int) -> list[int]:
@@ -54,7 +56,7 @@ def derivation_sources(res_seq: list[int], base: int) -> list[int]:
 
 def run_cascade_on_pyramid(pyramid, model_fns: Sequence[Callable],
                            thresholds, reps: Sequence[Representation],
-                           capacities: Sequence[int]):
+                           capacities: Sequence[int], level0_scores=None):
     """Run a cascade whose level inputs all derive from a CALLER-PROVIDED
     RGB pyramid cache ``{resolution: (B, r, r, 3) tensor}`` — the entry
     point the scan engine (engine/scan.py) uses so ONE materialized
@@ -62,6 +64,9 @@ def run_cascade_on_pyramid(pyramid, model_fns: Sequence[Callable],
     levels are pooled on the fly from the nearest (smallest) cached level
     whose resolution they divide, exactly the derivation_sources policy,
     and cached back into a local copy (the caller's dict is not mutated).
+    ``level0_scores``: precomputed level-0 probabilities (B,) — the fused
+    Pallas pyramid+stage-0 kernel's epilogue output; when given, level 0's
+    model is not invoked (its input derivation is skipped entirely).
     Returns (labels (B,), stats) like run_cascade_batch."""
     pyr_cache = dict(pyramid)
     base = max(pyr_cache)
@@ -81,7 +86,8 @@ def run_cascade_on_pyramid(pyramid, model_fns: Sequence[Callable],
         return color_transform(sub, reps[l].color)
 
     b = next(iter(pyr_cache.values())).shape[0]
-    return _cascade_loop(b, get_input, model_fns, thresholds, capacities)
+    return _cascade_loop(b, get_input, model_fns, thresholds, capacities,
+                         level0_scores=level0_scores)
 
 
 def run_cascade_batch(images, model_fns: Sequence[Callable],
@@ -119,17 +125,23 @@ def run_cascade_batch(images, model_fns: Sequence[Callable],
                          thresholds, capacities)
 
 
-def _cascade_loop(b: int, get_input, model_fns, thresholds, capacities):
+def _cascade_loop(b: int, get_input, model_fns, thresholds, capacities,
+                  level0_scores=None):
     """Two-phase compaction loop shared by both input paths.
     get_input(l, take): level-l input representation for the full batch
-    (take=None) or the gathered rows ``take``."""
+    (take=None) or the gathered rows ``take``. level0_scores: optional
+    precomputed level-0 probabilities (B,) — skips the level-0 model
+    invocation (the fused-kernel ingest path)."""
     labels = jnp.zeros((b,), jnp.int32)
     decided = jnp.zeros((b,), bool)
     overflow = jnp.zeros((), jnp.int32)
     levels_used = jnp.zeros((len(model_fns),), jnp.int32)
 
     # level 0 on the full batch
-    o = model_fns[0](get_input(0, None))
+    if level0_scores is None:
+        o = model_fns[0](get_input(0, None))
+    else:
+        o = level0_scores
     lo, hi = thresholds[0]
     if lo is None:
         return (o >= 0.5).astype(jnp.int32), {
@@ -176,3 +188,93 @@ def calibrate_capacity(uncertain_fraction: float, batch: int,
     """Capacity knob: expected uncertain count x a margin, clamped."""
     return int(min(batch, max(8, round(batch * uncertain_fraction
                                        * quantile_margin))))
+
+
+# ------------------------------------------------- fused chunk ingest --
+# The per-chunk hot path shared by the serial scan engine, the sharded
+# lockstep ingest runner, and the serving flush assembly (DESIGN.md §13):
+# ONE program per chunk does pyramid materialization + the full stage-0
+# cascade + carried-level emission, instead of separate XLA dispatches
+# with host round-trips between them. On TPU with real CNN params the
+# pyramid + level-0 model run as ONE Pallas pass (kernels/image_transform
+# .fused_pyramid_stage0, one HBM read of the base); elsewhere the same
+# composition runs unfused inside one jit — bit-exact, since every stage
+# is the identical jnp program.
+
+
+@dataclass(frozen=True)
+class Stage0:
+    """The first cascade stage's model, in kernel-foldable form: the raw
+    CNN parameter pytree + its input representation (CompiledCascade's
+    model_fns are opaque closures — the Pallas epilogue needs the actual
+    weights). ``qparams`` (models/cnn.quantize_cnn) enables the int8
+    weight path."""
+    params: Any
+    rep: Representation
+    qparams: Any = None
+
+
+def make_fused_ingest(model_fns: Sequence[Callable], thresholds,
+                      reps: Sequence[Representation],
+                      capacities: Sequence[int], out_res,
+                      *, stage0: Stage0 | None = None,
+                      materialize: Callable | None = None,
+                      use_kernel: bool | None = None, int8: bool = False,
+                      jit: bool = True):
+    """Build the fused per-chunk ingest: fn(imgs (B,H,H,3)) ->
+    (labels (B,), {res: (B,res,res,3) raw pooled level for res in
+    out_res}).
+
+    Runs the FULL stage-0 cascade (all its levels, full width — the
+    engine's dense_levels execution) and emits the ``out_res`` pyramid
+    levels the scan engine carries forward for later stages, in one
+    program. ``materialize(imgs, resolutions) -> {res: level}`` overrides
+    pyramid materialization on the unfused path (the scan engine injects
+    its module-global so tests can count calls); default is
+    core.transforms.materialize_pyramid. ``use_kernel=None`` resolves to
+    True on TPU when ``stage0`` carries real CNN params. ``int8`` swaps
+    stage-0's weights for the int8-quantized copy (dequantize-at-use;
+    requires ``stage0.qparams``)."""
+    out_res = [int(r) for r in out_res]
+    need = sorted({r.resolution for r in reps} | set(out_res))
+    if use_kernel is None:
+        use_kernel = (stage0 is not None
+                      and jax.default_backend() == "tpu")
+    if use_kernel and stage0 is None:
+        raise ValueError("use_kernel requires stage0 params")
+    if int8 and (stage0 is None or stage0.qparams is None):
+        raise ValueError("int8 requires stage0.qparams")
+    mat = materialize if materialize is not None else materialize_pyramid
+
+    model_fns = list(model_fns)
+    if int8 and not use_kernel:
+        # unfused int8: dequantize once at build, identical arithmetic
+        # to the kernel's dequantize-at-use epilogue
+        from repro.models.cnn import cnn_predict_proba, dequantize_cnn
+        model_fns[0] = partial(cnn_predict_proba,
+                               dequantize_cnn(stage0.qparams))
+
+    if use_kernel:
+        from repro.kernels.image_transform import fused_pyramid_stage0
+        qp = stage0.qparams if int8 else None
+
+        def run(imgs):
+            base = imgs.shape[1]
+            levels, s0 = fused_pyramid_stage0(
+                imgs, [r for r in need if r != base],
+                stage0.params, stage0.rep, qparams=qp)
+            pyr = {base: imgs, **levels}
+            labels, _ = run_cascade_on_pyramid(
+                pyr, model_fns, thresholds, reps, capacities,
+                level0_scores=s0)
+            return labels, {r: pyr[r] for r in out_res}
+    else:
+        def run(imgs):
+            base = imgs.shape[1]
+            pyr = dict(mat(imgs, [r for r in need if r != base]))
+            pyr.setdefault(base, imgs)
+            labels, _ = run_cascade_on_pyramid(
+                pyr, model_fns, thresholds, reps, capacities)
+            return labels, {r: pyr[r] for r in out_res}
+
+    return jax.jit(run) if jit else run

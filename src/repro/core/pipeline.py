@@ -240,12 +240,18 @@ class TahomaSystem:
         engine.scan.CompiledCascade — per-level model closures over this
         bank's trained params, thresholds, representations, plus the
         planner's cost (expected s/row under the space's scenario) and
-        selectivity (simulated over the cached eval scores) estimates."""
+        selectivity (simulated over the cached eval scores) estimates.
+        The level-0 model's raw params also ride along in kernel-
+        foldable form (executor.Stage0, with an int8-quantized copy) so
+        the scan engines' fused ingest can fold stage 0 into the Pallas
+        pyramid kernel on TPU (DESIGN.md §13)."""
         from functools import partial
 
         from repro.core.cascade import spec_levels
+        from repro.core.executor import Stage0
         from repro.core.selector import estimate_selectivity
         from repro.engine.scan import CompiledCascade
+        from repro.models.cnn import quantize_cnn
 
         levels = spec_levels(space, index, self.p_low, self.p_high)
         reps, fns, ths = [], [], []
@@ -259,11 +265,14 @@ class TahomaSystem:
                                    self.p_low, self.p_high)
         cascade_id = (int(space.kind[index]), int(space.i1[index]),
                       int(space.i2[index]))
+        e0 = self.bank.entries[levels[0][0]]
+        stage0 = Stage0(params=e0.params, rep=e0.rep,
+                        qparams=quantize_cnn(e0.params))
         return CompiledCascade(
             concept=concept, cascade_id=cascade_id, reps=reps,
             model_fns=fns, thresholds=ths,
             cost_s=float(space.time_s[index]), selectivity=sel,
-            capacities=capacities)
+            capacities=capacities, stage0=stage0)
 
 
 def initialize_system(train_split, config_split, eval_split,
@@ -287,7 +296,9 @@ def initialize_system(train_split, config_split, eval_split,
 
 def build_scan_engine(images, metadata=None, *, shards: int | None = None,
                       chunk: int = 64, jit: bool = True,
-                      strategy: str = "range", repcache=None):
+                      strategy: str = "range", repcache=None,
+                      fused: bool = True, lazy: bool = True,
+                      int8: bool = False, use_kernel: bool | None = None):
     """System-level scan-executor factory (the ``--shards N`` path in
     examples/ and benchmarks/): ``shards=None``/0 builds the single-host
     ScanEngine; any explicit shard count (including 1, for scaling-curve
@@ -295,15 +306,21 @@ def build_scan_engine(images, metadata=None, *, shards: int | None = None,
     same execute(cascades, metadata_eq) surface and virtual-column
     semantics. ``repcache`` (serial engine only) plugs a cross-query
     representation cache into per-chunk pyramid materialization
-    (DESIGN.md §10.3)."""
+    (DESIGN.md §10.3). ``fused``/``lazy``/``int8``/``use_kernel`` are
+    the hot-path knobs (DESIGN.md §13): fused single-program chunk
+    ingest, lazy first-touch level materialization, int8 stage-0
+    weights, and the Pallas pyramid+stage-0 kernel override."""
     from repro.engine.scan import ScanEngine
     from repro.engine.sharded import ShardedScanEngine
 
     if shards:
         return ShardedScanEngine(images, metadata, shards=int(shards),
-                                 chunk=chunk, jit=jit, strategy=strategy)
+                                 chunk=chunk, jit=jit, strategy=strategy,
+                                 fused=fused, lazy=lazy, int8=int8,
+                                 use_kernel=use_kernel)
     return ScanEngine(images, metadata, chunk=chunk, jit=jit,
-                      repcache=repcache)
+                      repcache=repcache, fused=fused, lazy=lazy,
+                      int8=int8, use_kernel=use_kernel)
 
 
 def build_cascade_service(images, cascades, *, mode: str = "async",

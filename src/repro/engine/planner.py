@@ -97,7 +97,10 @@ class PhysicalPlan:
     joint: bool = False   # cascade set chosen by the joint optimizer
     costing: str = "paper"   # joint costing mode: 'engine' prices the
     #                          scan paths' full-width (dense) level
-    #                          execution; 'paper' the §VI per-image walk
+    #                          execution with LAZY first-touch level
+    #                          materialization (engine/scan
+    #                          .level_schedule); 'paper' the §VI
+    #                          per-image walk
 
     @property
     def cascades(self) -> list:
@@ -113,25 +116,59 @@ class PhysicalPlan:
 
     def estimated_cost_per_row(self) -> float:
         """Expected engine seconds per metadata-surviving row. Joint
-        plans price shared pyramid levels once (joint_scan_cost);
+        plans price shared pyramid levels once (joint_scan_cost), at
+        the survival fraction of the first stage touching them — the
+        engine's LAZY first-touch materialization (dense_reps=False);
         independent plans keep the standalone per-cascade sum."""
         if self.joint and all(p.decomposed is not None
                               for p in self.predicates):
             return joint_scan_cost(
                 [p.decomposed for p in self.predicates],
                 [p.cascade.selectivity for p in self.predicates],
-                dense_reps=self.costing == "engine")
+                dense_reps=False)
         return expected_scan_cost(
             [p.cascade.cost_s for p in self.predicates],
             [p.cascade.selectivity for p in self.predicates])
+
+    def materialization_schedule(self, base_hw: int) -> dict:
+        """Non-base pyramid level -> the stage that first materializes
+        it under the engine's lazy schedule (engine/scan
+        .level_schedule): 0 for chunk-ingest levels (the first
+        cascade's own resolutions), s >= 1 for levels first-touch
+        derived inside stage s's flush. The measured counterpart is
+        ScanStats.level_rows: on a cold scan, an ingest level is pooled
+        for every scanned row and a first-touch level for exactly the
+        rows its stage evaluates."""
+        from repro.engine.scan import level_schedule
+        ingest, _, derive = level_schedule(self.cascades, base_hw, True)
+        out = {r: 0 for r in ingest}
+        for s, res in enumerate(derive):
+            for r in res:
+                out[r] = s
+        return out
+
+    def expected_level_rows(self, n_rows: int, base_hw: int) -> dict:
+        """Estimated per-level materialization counts for a COLD scan
+        of ``n_rows`` metadata-surviving rows: level -> expected rows
+        pooled. Ingest levels are charged for every scanned row; a
+        first-touch level for the estimated survivors reaching its
+        stage. The measured counterpart is ScanStats.level_rows
+        (rendered side by side by ``explain(actual=...)``)."""
+        sched = self.materialization_schedule(base_hw)
+        survive = [1.0]
+        for p in self.predicates:
+            survive.append(survive[-1]
+                           * min(max(p.cascade.selectivity, 0.0), 1.0))
+        return {r: n_rows * survive[s] for r, s in sched.items()}
 
     def unshared_cost_per_row(self) -> float:
         """The SAME cascades and order priced without representation
         sharing (every predicate pays its standalone cost, in this
         plan's costing mode) — the baseline of explain()'s
         shared-representation savings. Under engine costing the
-        unshared rep charges are at probability 1 per predicate, the
-        same weight the joint pricing uses, so savings are always
+        unshared rep charges are at probability 1 per predicate while
+        the joint pricing charges marginal rep costs at the (<= 1)
+        survival fraction of the first touch, so savings are always
         >= 0."""
         sels = [p.cascade.selectivity for p in self.predicates]
         if self.joint and self.costing == "engine" and \
@@ -146,7 +183,8 @@ class PhysicalPlan:
              else p.decomposed.total_s for p in self.predicates], sels)
 
     def explain(self, n_rows: int | None = None,
-                shard_plan=None) -> str:
+                shard_plan=None, *, base_hw: int | None = None,
+                actual=None) -> str:
         """EXPLAIN-style physical plan: predicate order, chosen cascade,
         estimated cost + selectivity per predicate, totals. Joint plans
         additionally print, per predicate, the pyramid levels it touches
@@ -154,9 +192,16 @@ class PhysicalPlan:
         (``shared=``), and its marginal vs standalone representation
         cost — plus a summary line with the plan-wide
         shared-representation savings and the pyramid level set the
-        engine will materialize per chunk. With a ``ShardPlan``
-        (sharding/policy.py) the plan also reports the shard layout and
-        the estimated per-shard scan cost."""
+        engine touches. With ``base_hw`` (the corpus base resolution)
+        the plan also prints the lazy materialization schedule
+        (which stage first touches each level) and the estimated
+        per-level row counts; ``actual`` (a ScanStats /
+        ShardedScanStats from executing this plan, or a bare
+        ``level_rows`` dict) renders measured counts side by side —
+        estimated-vs-actual agreement is the engine-costing contract
+        (DESIGN.md §13). With a ``ShardPlan`` (sharding/policy.py) the
+        plan also reports the shard layout and the estimated per-shard
+        scan cost."""
         lines = [f"PHYSICAL PLAN  scenario={self.scenario}  "
                  f"binary predicates={len(self.predicates)}"
                  + (f"  [joint, {self.costing} costing]"
@@ -215,6 +260,30 @@ class PhysicalPlan:
             lines.append(f"  est. rows: {n_rows} scanned -> "
                          f"{n_rows * m:.0f} past metadata -> "
                          f"{n_rows * m * survive:.0f} returned")
+        if base_hw is not None:
+            sched = self.materialization_schedule(base_hw)
+            if sched:
+                lines.append(
+                    "  lazy level schedule: " + ", ".join(
+                        f"{r}@" + ("ingest" if s == 0
+                                   else f"stage{s + 1}")
+                        for r, s in sorted(sched.items(), reverse=True)))
+                lr = (actual if actual is None or isinstance(actual, dict)
+                      else actual.level_rows)
+                if n_rows is not None or lr is not None:
+                    m = (self.meta_selectivity
+                         if self.meta_selectivity is not None else 1.0)
+                    est = (self.expected_level_rows(
+                        int(round(n_rows * m)), base_hw)
+                        if n_rows is not None else {})
+                    parts = []
+                    for r in sorted(set(est) | set(lr or {}),
+                                    reverse=True):
+                        e = f"{est[r]:.0f} est" if r in est else "? est"
+                        a = (f" -> {int((lr or {}).get(r, 0))} actual"
+                             if lr is not None else "")
+                        parts.append(f"{r}: {e}{a}")
+                    lines.append("  level rows: " + "; ".join(parts))
         if shard_plan is not None:
             lines.append(f"  sharding: {shard_plan.describe()}")
             # per-shard cost follows the plan's own (possibly skew-aware)
@@ -273,12 +342,15 @@ def joint_scan_cost(decs: Sequence[DecomposedCost], selectivities,
     at the survival fraction of the first predicate touching it (the
     §VI-style rule); with disjoint level sets this reduces exactly to
     ``expected_scan_cost`` of the standalone totals and never exceeds
-    it for any fixed (set, order). ``dense_reps=True`` (the planner's
-    'engine' costing) charges each first-touched level at probability 1
-    instead: the scan engine materializes the full union pyramid at
-    chunk INGEST for every scanned row, before any predicate runs, so
-    survival-weighting rep charges would price a cost the engine does
-    not pay that way."""
+    it for any fixed (set, order). With lazy scheduling
+    (engine/scan.level_schedule, the engines' default) the scan paths
+    materialize each later-stage-only level at first touch BY
+    SURVIVORS, so the survival-weighted rule prices exactly what they
+    pay — 'engine' costing uses it too. ``dense_reps=True`` charges
+    each first-touched level at probability 1 instead, pricing the
+    EAGER (``lazy=False``) engine, which materializes the full union
+    pyramid at chunk ingest for every scanned row; it is kept as the
+    reference/benchmark-baseline pricing."""
     if order is None:
         order = range(len(decs))
     total, p = 0.0, 1.0
@@ -429,9 +501,14 @@ def _plan_query_joint(systems: Mapping, spec: QuerySpec, *,
                             if s.index == ind.index))
 
     pools, ind_pos = _trim_pools(pools, ind_pos, max_combos)
+    # dense_reps=False in BOTH costing modes: the engines' lazy
+    # first-touch schedule charges each level at the survival fraction
+    # of the stage that first touches it (level_schedule); 'engine'
+    # costing differs from 'paper' in the per-level execution pricing
+    # (dense_levels above), not in the rep-charge weighting
     best_combo, best_order, _ = search_joint(
         [[(dec, frac) for _, dec, frac in entries] for entries in pools],
-        tuple(ind_pos), dense_reps=costing == "engine")
+        tuple(ind_pos), dense_reps=False)
 
     planned = []
     mat: set = set()
@@ -564,7 +641,9 @@ class OnlineReorderer:
     @classmethod
     def from_plan(cls, plan: PhysicalPlan, **kw) -> "OnlineReorderer":
         decs = [p.decomposed for p in plan.predicates]
-        kw.setdefault("dense_reps", plan.costing == "engine")
+        # lazy first-touch rep pricing in every costing mode — matches
+        # the plan search (see _plan_query_joint) and the engines
+        kw.setdefault("dense_reps", False)
         return cls(plan.cascades,
                    decomposed=decs if all(d is not None for d in decs)
                    else None, **kw)

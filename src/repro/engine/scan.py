@@ -51,8 +51,9 @@ from typing import Callable, Mapping, Sequence
 
 import numpy as np
 
-from repro.core.executor import run_cascade_batch, run_cascade_on_pyramid
-from repro.core.transforms import materialize_pyramid
+from repro.core.executor import (Stage0, make_fused_ingest,
+                                 run_cascade_batch, run_cascade_on_pyramid)
+from repro.core.transforms import materialize_pyramid, resize_area
 
 
 @dataclass
@@ -74,6 +75,11 @@ class CompiledCascade:
     # ignore it and run full-width levels so scan results are exact,
     # batch-packing independent, and safe to cache as virtual columns.
     capacities: list | None = None
+    # level-0 model in kernel-foldable form (core/executor.Stage0):
+    # raw CNN params (+ optional int8 copy) for the fused Pallas
+    # pyramid+stage-0 ingest. None (opaque model_fns only) disables the
+    # kernel path; the fused jit composition still applies.
+    stage0: Stage0 | None = None
 
     @property
     def key(self) -> tuple:
@@ -165,6 +171,38 @@ def stage_needs(cascades: Sequence[CompiledCascade],
     return needed, union_res
 
 
+def level_schedule(cascades: Sequence[CompiledCascade], base_hw: int,
+                   lazy: bool = True) -> tuple[tuple, list, list]:
+    """The engine's level-materialization schedule (DESIGN.md §13):
+
+    * ``ingest``: non-base levels pooled at chunk ingest. Lazy: only the
+      FIRST cascade's levels (its stage-0 run needs them full-width
+      anyway). Eager: the whole union (``needed[0]``) — the pre-PR-7
+      behavior, kept as the reference/benchmark baseline;
+    * ``carry[s]``: non-base levels rows entering stage s carry in their
+      stage buffer — ``needed[s]`` restricted to what is materialized by
+      then (the base is never buffered; flushes regather it from the
+      corpus when a cascade or a derivation reads it);
+    * ``derive[s]``: levels stage s's flush must pool from the carried
+      levels / base because no earlier stage materialized them — first
+      touch AT SURVIVORS, the behavior ``costing='engine'``
+      (joint_scan_cost(dense_reps=False)) prices. Always empty for s=0
+      and in eager mode.
+    """
+    needed, _ = stage_needs(cascades, base_hw)
+    res = [{r.resolution for r in c.reps} for c in cascades]
+    ingest = (set(res[0]) if lazy else set(needed[0])) - {base_hw}
+    mat = ingest | {base_hw}
+    carry: list[tuple] = []
+    derive: list[tuple] = []
+    for s in range(len(cascades)):
+        carry.append(tuple(sorted((set(needed[s]) & mat) - {base_hw},
+                                  reverse=True)))
+        derive.append(tuple(sorted(res[s] - mat, reverse=True)))
+        mat |= res[s]
+    return tuple(sorted(ingest, reverse=True)), carry, derive
+
+
 @dataclass
 class StageStats:
     concept: str
@@ -183,10 +221,22 @@ class ScanStats:
     #                           per-chunk pyramid materialization)
     reorders: int = 0         # mid-scan predicate re-orderings applied
     #                           (engine/planner.OnlineReorderer hook)
-    pyramid_levels: tuple = ()  # the per-chunk materialization set: the
-    #                           union of every cascade's resolutions plus
-    #                           the raw base (== PhysicalPlan.level_set
-    #                           of the plan being executed, plus base)
+    pyramid_levels: tuple = ()  # the STATIC union level set of the plan
+    #                           being executed: every cascade's
+    #                           resolutions plus the raw base (==
+    #                           PhysicalPlan.level_set + base) — what the
+    #                           scan COULD touch, independent of lazy
+    #                           scheduling
+    level_rows: dict = field(default_factory=dict)  # MEASURED per-level
+    #                           materializations: non-base resolution ->
+    #                           number of valid rows the level was
+    #                           physically pooled for (chunk ingest,
+    #                           flush-time first-touch derivation, and
+    #                           cache-skip backfill all count). Under
+    #                           lazy scheduling on a cold store this
+    #                           matches the planner's first-touch
+    #                           schedule exactly (PhysicalPlan.explain
+    #                           renders estimated-vs-actual)
     stages: list = field(default_factory=list)
 
     @property
@@ -219,11 +269,24 @@ class ScanEngine:
 
     def __init__(self, images, metadata: Mapping[str, np.ndarray]
                  | None = None, *, chunk: int = 64, jit: bool = True,
-                 repcache=None):
+                 repcache=None, fused: bool = True, lazy: bool = True,
+                 int8: bool = False, use_kernel: bool | None = None):
         self.images = np.asarray(images, np.float32)
         self.metadata = dict(metadata or {})
         self.chunk = int(chunk)
         self.jit = jit
+        # fused: run chunk ingest (pyramid + the FULL first cascade) as
+        # one program instead of a pyramid program + stage-0 buffer
+        # flushes. lazy: materialize later-stage-only levels at flush-
+        # time first touch (level_schedule) instead of at ingest. int8:
+        # stage-0 inference on int8-quantized weights (needs
+        # CompiledCascade.stage0.qparams; ignored for opaque cascades).
+        # use_kernel: force the Pallas pyramid+stage-0 kernel on/off
+        # (None = auto: TPU with stage0 params).
+        self.fused = bool(fused)
+        self.lazy = bool(lazy)
+        self.int8 = bool(int8)
+        self.use_kernel = use_kernel
         self.store = VirtualColumnStore(len(self.images))
         # optional cross-query representation cache
         # (serve/repcache.RepresentationCache): chunks whose non-base
@@ -237,6 +300,7 @@ class ScanEngine:
             repcache.bind_corpus(corpus_token(self.images))
         self._pyr_fns: dict = {}
         self._casc_fns: dict = {}
+        self._ingest_fns: dict = {}
 
     def reset_cache(self) -> None:
         """Drop the virtual-column store (keeps compiled cascades)."""
@@ -253,19 +317,56 @@ class ScanEngine:
             self._pyr_fns[resolutions] = jax.jit(mat) if self.jit else mat
         return self._pyr_fns[resolutions]
 
-    def _cascade_fn(self, casc: CompiledCascade) -> Callable:
-        key = casc.key
+    def _cascade_fn(self, casc: CompiledCascade, in_res: tuple,
+                    out_res: tuple) -> Callable:
+        """Flush program for one cascade: pyr ({res: rows} covering
+        ``in_res``) -> (labels, {res: derived level for res in
+        ``out_res``}). Levels the cascade reads that are NOT in
+        ``in_res`` are derived progressively inside the program (each
+        from the smallest provided/derived level that divides it — the
+        plan_pyramid policy, bit-exact from base for dyadic pixels);
+        ``out_res`` names the derived levels downstream stages carry."""
+        key = (casc.key, tuple(in_res), tuple(out_res))
         if key not in self._casc_fns:
             import jax
             # full-width levels, never casc.capacities: see CompiledCascade
             caps = [self.chunk] * (len(casc.model_fns) - 1)
+            steps: list[tuple[int, int]] = []
+            avail = set(in_res)
+            for r in sorted(set(casc.resolutions) - avail, reverse=True):
+                steps.append((r, min(m for m in avail if m % r == 0)))
+                avail.add(r)
 
             def run(pyr):
-                return run_cascade_on_pyramid(
-                    pyr, casc.model_fns, casc.thresholds, casc.reps,
+                cache = dict(pyr)
+                for r, src in steps:
+                    cache[r] = resize_area(cache[src], r)
+                labels = run_cascade_on_pyramid(
+                    cache, casc.model_fns, casc.thresholds, casc.reps,
                     caps)[0]
+                return labels, {r: cache[r] for r in out_res}
             self._casc_fns[key] = jax.jit(run) if self.jit else run
         return self._casc_fns[key]
+
+    def _ingest_fn(self, casc: CompiledCascade, out_res: tuple) -> Callable:
+        """Fused chunk-ingest program (core/executor.make_fused_ingest):
+        imgs -> (stage-0 labels, carried levels). The materialize
+        callable resolves this module's ``materialize_pyramid`` at call
+        time so invocation-counting tests can intercept it."""
+        key = (casc.key, tuple(out_res))
+        if key not in self._ingest_fns:
+            caps = [self.chunk] * (len(casc.model_fns) - 1)
+            int8 = (self.int8 and casc.stage0 is not None
+                    and casc.stage0.qparams is not None)
+            use_kernel = self.use_kernel
+            if casc.stage0 is None:
+                use_kernel = False
+            self._ingest_fns[key] = make_fused_ingest(
+                casc.model_fns, casc.thresholds, casc.reps, caps,
+                out_res, stage0=casc.stage0,
+                materialize=lambda img, res: materialize_pyramid(img, res),
+                use_kernel=use_kernel, int8=int8, jit=self.jit)
+        return self._ingest_fns[key]
 
     # --------------------------------------------------------- execution --
     def metadata_mask(self, metadata_eq: Mapping | None) -> np.ndarray:
@@ -317,12 +418,17 @@ class ScanEngine:
         if k == 0:
             return ScanResult(np.sort(ids_all), stats)
 
-        needed, union_res = stage_needs(cascades, self.images.shape[1])
+        base_hw = self.images.shape[1]
+        needed, union_res = stage_needs(cascades, base_hw)
         stats.pyramid_levels = union_res
-        pyr_fn = self._pyramid_fn(union_res)
-        runners = [self._cascade_fn(c) for c in cascades]
-        buffers = [_StageBuffer(self.chunk, needed[s]) for s in range(k)]
+        ingest_set, carry, derive = level_schedule(cascades, base_hw,
+                                                   self.lazy)
+        buffers = [_StageBuffer(self.chunk, carry[s]) for s in range(k)]
         accepted: list[np.ndarray] = []
+
+        def count_levels(res, n: int) -> None:
+            for r in res:
+                stats.level_rows[r] = stats.level_rows.get(r, 0) + n
 
         def route(stage: int, ids: np.ndarray, rows: dict) -> None:
             """Advance rows through cached labels; buffer the first
@@ -340,7 +446,8 @@ class ScanEngine:
                 unknown = ~known
                 if unknown.any():
                     feed(stage, ids[unknown],
-                         {r: rows[r][unknown] for r in buffers[stage].rows})
+                         {r: v[unknown] for r, v in rows.items()
+                          if r in buffers[stage].rows})
                 keep = known & (cached == 1)
                 ids = ids[keep]
                 rows = {r: v[keep] for r, v in rows.items()}
@@ -348,6 +455,18 @@ class ScanEngine:
 
         def feed(stage: int, ids: np.ndarray, rows: dict) -> None:
             buf = buffers[stage]
+            missing = [r for r in buf.rows if r not in rows]
+            if missing:
+                # cache-skip backfill: rows that hopped over earlier
+                # stages on cached labels never saw those stages' flush-
+                # time derivation — pool their carry levels straight
+                # from base (bit-exact for dyadic pixels, the
+                # materialize_pyramid caveat)
+                rows = dict(rows)
+                imgs = jnp.asarray(self.images[ids])
+                for r in missing:
+                    rows[r] = np.asarray(resize_area(imgs, r))
+                count_levels(missing, len(ids))
             pos = 0
             while pos < len(ids):
                 take = min(buf.cap - buf.fill, len(ids) - pos)
@@ -367,13 +486,26 @@ class ScanEngine:
                 return
             casc = cascades[stage]
             st = stats.stages[stage]
+            bres = tuple(buf.rows)
+            down_carry = tuple(r for r in bres
+                               if stage + 1 < k and r in needed[stage + 1])
+            out_dev = tuple(r for r in derive[stage]
+                            if stage + 1 < k and r in needed[stage + 1])
+            need_base = base_hw in casc.resolutions or bool(derive[stage])
+            fn = self._cascade_fn(
+                casc, bres + ((base_hw,) if need_base else ()), out_dev)
             # rows past ``fill`` are stale padding: per-row independence
             # keeps the valid rows' labels exact regardless
-            pyr = {r: jnp.asarray(buf.rows[r]) for r in casc.resolutions}
-            labels = np.asarray(runners[stage](pyr))[:nv]
+            pyr = {r: jnp.asarray(buf.rows[r]) for r in bres}
+            if need_base:
+                pyr[base_hw] = jnp.asarray(self.images[buf.ids])
+            labels, dev_levels = fn(pyr)
+            labels = np.asarray(labels)[:nv]
             ids = buf.ids[:nv].copy()
-            down = {r: buf.rows[r][:nv].copy()
-                    for r in (needed[stage + 1] if stage + 1 < k else ())}
+            down = {r: buf.rows[r][:nv].copy() for r in down_carry}
+            for r in out_dev:
+                down[r] = np.asarray(dev_levels[r])[:nv]
+            count_levels(derive[stage], nv)
             buf.fill = 0
             st.rows_evaluated += nv
             st.batches += 1
@@ -390,47 +522,100 @@ class ScanEngine:
             buffered rows complete normally), then permute the
             per-stage structures and rebuild empty buffers with the new
             order's carry lists. The cascade SET is unchanged, so the
-            chunk-ingest union pyramid (union_res) stays valid."""
-            nonlocal needed
+            union level set (union_res) stays valid — but the lazy
+            schedule is order-dependent and is recomputed."""
+            nonlocal needed, ingest_set, carry, derive, small
             for s in range(k):
                 flush(s)
             cascades[:] = [cascades[i] for i in perm]
             stats.stages[:] = [stats.stages[i] for i in perm]
-            runners[:] = [runners[i] for i in perm]
-            needed, _ = stage_needs(cascades, self.images.shape[1])
-            buffers[:] = [_StageBuffer(self.chunk, needed[s])
+            needed, _ = stage_needs(cascades, base_hw)
+            ingest_set, carry, derive = level_schedule(
+                cascades, base_hw, self.lazy)
+            small = list(ingest_set)
+            buffers[:] = [_StageBuffer(self.chunk, carry[s])
                           for s in range(k)]
             stats.reorders += 1
 
         stats.rows_scanned = len(ids_all)
-        base_hw = self.images.shape[1]
-        small = [r for r in needed[0] if r != base_hw]
+        small = list(ingest_set)
         for lo in range(0, len(ids_all), self.chunk):
             sel = ids_all[lo:lo + self.chunk]
+            casc0 = cascades[0]
+            cached0 = store.lookup(casc0.key, sel)
+            unk = cached0 < 0
+            n_unknown = int(unk.sum())
             cached = (self.repcache.lookup_rows(sel, small)
                       if self.repcache is not None and small else None)
             if cached is not None:
-                # every non-base level of every chunk row is cached:
-                # skip the pyramid entirely (the base level, when some
-                # cascade reads it, is the raw image row itself)
-                rows = cached
-                if base_hw in needed[0]:
-                    rows[base_hw] = self.images[sel]
+                # every ingest level of every chunk row is cached: skip
+                # materialization entirely; stage 0 evaluates through
+                # its buffer like any later stage
                 stats.rep_rows_cached += len(sel)
-            else:
+                route(0, sel, dict(cached))
+            elif n_unknown == 0:
+                # stage-0 labels all known: no ingest work at all —
+                # rows that reach a later unknown stage get their carry
+                # levels backfilled at feed time
+                route(0, sel, {})
+            elif self.fused:
+                # fused ingest: pyramid + the FULL first cascade in one
+                # program (on TPU with stage0 params, pyramid + level 0
+                # are ONE Pallas pass). The whole padded chunk is
+                # evaluated; only unknown rows are recorded/counted —
+                # known rows keep their stored labels.
                 imgs = self.images[sel]
                 if len(sel) < self.chunk:  # static-shape pad (one compile)
                     pad = np.repeat(imgs[-1:], self.chunk - len(sel),
                                     axis=0)
                     imgs = np.concatenate([imgs, pad])
+                # with a repcache every ingest level is emitted (so the
+                # cache sees complete chunks); otherwise only the levels
+                # later stages carry leave the program
+                out_res = (tuple(ingest_set) if self.repcache is not None
+                           else (carry[1] if k > 1 else ()))
+                labels, levels = self._ingest_fn(casc0, out_res)(
+                    jnp.asarray(imgs))
+                labels = np.asarray(labels)[:len(sel)]
+                rows = {r: np.asarray(v)[:len(sel)]
+                        for r, v in levels.items()}
+                stats.chunks += 1
+                count_levels(ingest_set, len(sel))
+                if self.repcache is not None:
+                    for r in small:
+                        if r in rows:
+                            self.repcache.put_rows(sel, r, rows[r])
+                st = stats.stages[0]
+                st.rows_in += len(sel)
+                st.rows_cached += len(sel) - n_unknown
+                st.rows_evaluated += n_unknown
+                st.batches += 1
+                store.record(casc0.key, sel[unk], labels[unk])
+                if monitor is not None:
+                    monitor.observe(casc0.key, labels[unk])
+                final = np.where(unk, labels, cached0)
+                keep = final == 1
+                route(1, sel[keep], {r: v[keep] for r, v in rows.items()})
+            else:
+                # unfused ingest (reference/benchmark baseline): one
+                # pyramid program per chunk, stage 0 through its buffer
+                imgs = self.images[sel]
+                if len(sel) < self.chunk:
+                    pad = np.repeat(imgs[-1:], self.chunk - len(sel),
+                                    axis=0)
+                    imgs = np.concatenate([imgs, pad])
+                pyr_fn = self._pyramid_fn(
+                    tuple(sorted(set(ingest_set) | {base_hw},
+                                 reverse=True)))
                 levels = pyr_fn(jnp.asarray(imgs))
                 rows = {r: np.asarray(levels[r])[:len(sel)]
-                        for r in needed[0]}
+                        for r in ingest_set}
                 stats.chunks += 1
+                count_levels(ingest_set, len(sel))
                 if self.repcache is not None:
                     for r in small:
                         self.repcache.put_rows(sel, r, rows[r])
-            route(0, sel, rows)
+                route(0, sel, rows)
             if monitor is not None and k > 1:
                 perm = monitor.propose(cascades)
                 if perm is not None:

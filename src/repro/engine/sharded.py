@@ -65,7 +65,8 @@ from typing import Mapping, Sequence
 import numpy as np
 
 from repro.engine.scan import (CompiledCascade, ScanEngine, ScanStats,
-                               StageStats, VirtualColumnStore, stage_needs)
+                               StageStats, VirtualColumnStore,
+                               level_schedule, stage_needs)
 from repro.sharding.policy import ShardPlan, plan_shards
 
 
@@ -114,6 +115,16 @@ class ShardedScanStats:
         return sum(s.rows_evaluated for s in self.shards)
 
     @property
+    def level_rows(self) -> dict:
+        """Per-level materialization counters summed across shards
+        (same shape as ScanStats.level_rows)."""
+        out: dict = {}
+        for sh in self.shards:
+            for r, n in sh.level_rows.items():
+                out[r] = out.get(r, 0) + n
+        return out
+
+    @property
     def stages(self) -> list:
         """Per-predicate StageStats summed across shards (same shape the
         single-shard ScanStats exposes)."""
@@ -138,6 +149,22 @@ class ShardedScanResult:
     stats: ShardedScanStats
 
 
+class _ObserveOnly:
+    """Monitor wrapper for the serial-fallback shard loop: forwards
+    observed labels (so re-plans see measured selectivities) but
+    suppresses re-order proposals — a per-shard re-order would desync
+    the shards' stage aggregation for zero dispatch savings."""
+
+    def __init__(self, monitor):
+        self._monitor = monitor
+
+    def observe(self, key, labels) -> None:
+        self._monitor.observe(key, labels)
+
+    def propose(self, cascades):
+        return None
+
+
 class ShardedScanEngine:
     """Corpus-wide scan over N shards with one merged virtual-column
     store. Wraps a single-host ScanEngine for the shared pieces
@@ -147,10 +174,14 @@ class ShardedScanEngine:
     def __init__(self, images, metadata: Mapping[str, np.ndarray]
                  | None = None, *, shards: int | None = None,
                  chunk: int = 64, jit: bool = True,
-                 strategy: str = "range", devices: Sequence | None = None):
+                 strategy: str = "range", devices: Sequence | None = None,
+                 fused: bool = True, lazy: bool = True, int8: bool = False,
+                 use_kernel: bool | None = None):
         from repro.launch.mesh import shard_devices
 
-        self.local = ScanEngine(images, metadata, chunk=chunk, jit=jit)
+        self.local = ScanEngine(images, metadata, chunk=chunk, jit=jit,
+                                fused=fused, lazy=lazy, int8=int8,
+                                use_kernel=use_kernel)
         self.devices = list(devices) if devices is not None \
             else shard_devices(shards)
         self.n_shards = int(shards) if shards is not None \
@@ -181,32 +212,41 @@ class ShardedScanEngine:
 
     # ---------------------------------------------------- shard planning --
     def row_weights(self, cascades: Sequence[CompiledCascade],
-                    ids: np.ndarray) -> np.ndarray:
+                    ids: np.ndarray, *, monitor=None) -> np.ndarray:
         """Expected evaluation seconds per row under the planner's
         cost/selectivity estimates, refined by the store: a cached label
         costs nothing and collapses the row's survival to 0/1. This is
         the skew-aware signal range partitioning balances on — after a
         partial first query, the un-evaluated region of the corpus is
-        more expensive and gets spread across more shards."""
+        more expensive and gets spread across more shards. ``monitor``
+        (engine/planner.OnlineReorderer) swaps the static plan-time
+        selectivities for the selectivities OBSERVED in earlier flushes
+        (``monitor.refined``) — so a re-plan mid-corpus weighs the
+        remaining rows by what the scan has actually measured, not by
+        eval-split estimates that may have drifted."""
         ids = np.asarray(ids, np.int64)
         w = np.zeros(len(ids))
         alive = np.ones(len(ids))
         for casc in cascades:
+            sel = (monitor.refined(casc.key) if monitor is not None
+                   else casc.selectivity)
             cached = self.store.lookup(casc.key, ids)
             w += alive * np.where(cached < 0, max(casc.cost_s, 1e-12), 0.0)
             alive *= np.where(cached == 0, 0.0,
                               np.where(cached == 1, 1.0,
-                                       np.clip(casc.selectivity, 0.0, 1.0)))
+                                       np.clip(sel, 0.0, 1.0)))
         return w
 
     def plan_for(self, cascades: Sequence[CompiledCascade],
                  metadata_eq: Mapping | None = None, *,
-                 ids: np.ndarray | None = None) -> ShardPlan:
+                 ids: np.ndarray | None = None, monitor=None) -> ShardPlan:
         """The ShardPlan execute() would use: survivor ids partitioned
-        under this engine's strategy with skew-aware weights."""
+        under this engine's strategy with skew-aware weights (observed-
+        selectivity-refined when a ``monitor`` is given)."""
         if ids is None:
             ids = np.where(self.metadata_mask(metadata_eq))[0]
-        weights = self.row_weights(cascades, ids) if cascades else None
+        weights = (self.row_weights(cascades, ids, monitor=monitor)
+                   if cascades else None)
         return plan_shards(ids, self.n_shards, strategy=self.strategy,
                            weights=weights)
 
@@ -214,14 +254,22 @@ class ShardedScanEngine:
     def execute(self, cascades: Sequence[CompiledCascade],
                 metadata_eq: Mapping | None = None, *,
                 shard_plan: ShardPlan | None = None,
-                parallel: bool = True) -> ShardedScanResult:
+                parallel: bool = True,
+                monitor: object | None = None) -> ShardedScanResult:
         """SELECT row ids WHERE metadata_eq AND every cascade labels 1,
         sharded. ``shard_plan`` overrides the engine's own planning (it
-        must partition exactly the metadata survivors)."""
+        must partition exactly the metadata survivors). ``monitor``
+        (engine/planner.OnlineReorderer) is OBSERVE-ONLY here: every
+        evaluation flush feeds it measured labels — so the NEXT
+        ``plan_for`` partitions on observed selectivities — but the
+        sharded backends never apply its re-order proposals mid-scan
+        (per-shard re-ordering would desync the lockstep supersteps and
+        the cross-shard stage aggregation)."""
         cascades = list(cascades)
         ids_all = np.where(self.metadata_mask(metadata_eq))[0]
         if shard_plan is None:
-            shard_plan = self.plan_for(cascades, ids=ids_all)
+            shard_plan = self.plan_for(cascades, ids=ids_all,
+                                       monitor=monitor)
         else:
             shard_plan.validate(ids_all)
 
@@ -246,14 +294,16 @@ class ShardedScanEngine:
             shard_stores.append(st)
         if parallel:
             accepted = self._lockstep(cascades, shard_plan, shard_stores,
-                                      stats)
+                                      stats, monitor=monitor)
         else:
+            proxy = _ObserveOnly(monitor) if monitor is not None else None
             accepted = []
             for si, part in enumerate(shard_plan.shards):
                 if not len(part):
                     continue
                 r = self.local.scan_rows(cascades, part,
-                                         store=shard_stores[si])
+                                         store=shard_stores[si],
+                                         monitor=proxy)
                 stats.shards[si] = r.stats
                 accepted.append(r.indices)
 
@@ -287,57 +337,83 @@ class ShardedScanEngine:
             self._fns[key] = runner
         return self._fns[key]
 
-    def _ingest_runner(self, casc: CompiledCascade, union_res: tuple,
-                       out_res: tuple, width: int):
+    def _ingest_runner(self, casc: CompiledCascade, out_res: tuple,
+                       width: int):
         """Fused ingest superstep: gather the slab's rows from the
-        device-resident shard image block, materialize the shared
-        pyramid shard-locally, run cascade 0, and ship back ONLY the
-        labels plus the small non-base levels later stages carry — the
-        base level never round-trips (it is regathered from the block at
-        flush time). One dispatch per superstep, minimal host bytes."""
+        device-resident shard image block, then run the same fused
+        pyramid + full-stage-0 program the serial engine builds
+        (core/executor.make_fused_ingest — the Pallas pyramid+stage-0
+        kernel on TPU with real CNN params, one jit composition
+        elsewhere). Ships back ONLY the labels plus the small non-base
+        levels later stages carry; the base level never round-trips (it
+        is regathered from the block at flush time). Under lazy
+        scheduling the program materializes just cascade 0's own levels
+        plus ``out_res`` — later-stage-only levels wait for first touch
+        at flush. One dispatch per superstep, minimal host bytes."""
         def make():
             import jax.numpy as jnp
 
-            from repro.core.executor import run_cascade_on_pyramid
-            from repro.core.transforms import materialize_pyramid
+            from repro.core.executor import make_fused_ingest
+            # same chunk-clamped full-width capacities and int8/kernel
+            # resolution as the serial engine's _ingest_fn (argsort
+            # slicing clamps cap to the slab width b <= chunk)
+            caps = [self.chunk] * (len(casc.model_fns) - 1)
+            int8 = (self.local.int8 and casc.stage0 is not None
+                    and casc.stage0.qparams is not None)
+            use_kernel = (self.local.use_kernel
+                          if casc.stage0 is not None else False)
+            core = make_fused_ingest(
+                casc.model_fns, casc.thresholds, casc.reps, caps,
+                out_res, stage0=casc.stage0, use_kernel=use_kernel,
+                int8=int8, jit=False)
 
             def fn(block, idx):
-                imgs = jnp.take(block, idx, axis=0)
-                pyr = materialize_pyramid(imgs, union_res)
-                caps = [idx.shape[0]] * (len(casc.model_fns) - 1)
-                labels = run_cascade_on_pyramid(
-                    {r: pyr[r] for r in casc.resolutions},
-                    casc.model_fns, casc.thresholds, casc.reps, caps)[0]
-                return labels, {r: pyr[r] for r in out_res}
+                return core(jnp.take(block, idx, axis=0))
             return fn
         return self._slab_runner(
-            ("ingest", casc.key, union_res, out_res, width), make)
+            ("ingest", casc.key, out_res, width), make)
 
     def _flush_runner(self, casc: CompiledCascade, base_hw: int,
-                      width: int):
+                      in_res: tuple, out_res: tuple, width: int):
         """Stage-s flush: cascade inputs are the host-carried small
-        levels plus (when the cascade reads the base resolution) a
-        device-side regather from the shard image block."""
-        with_base = base_hw in casc.resolutions
+        levels (``in_res`` minus base) plus, when the cascade reads the
+        base resolution or must first-touch-derive a level, a
+        device-side regather from the shard image block. Levels the
+        cascade reads that are NOT in ``in_res`` are derived inside the
+        program with exactly the serial engine's _cascade_fn policy
+        (smallest provided/derived level that divides — bit-exact from
+        base for dyadic pixels); ``out_res`` names the derived levels
+        shipped back for downstream stages to carry."""
+        with_base = base_hw in in_res
 
         def make():
             import jax.numpy as jnp
 
             from repro.core.executor import run_cascade_on_pyramid
+            from repro.core.transforms import resize_area
+            # full-width levels clamped by slab width, never
+            # casc.capacities — see CompiledCascade
+            caps = [self.chunk] * (len(casc.model_fns) - 1)
+            steps: list[tuple[int, int]] = []
+            avail = set(in_res)
+            for r in sorted(set(casc.resolutions) - avail, reverse=True):
+                steps.append((r, min(m for m in avail if m % r == 0)))
+                avail.add(r)
 
             def fn(block, idx, small):
                 pyr = dict(small)
                 if with_base:
                     pyr[base_hw] = jnp.take(block, idx, axis=0)
-                # full-width levels at the slab's (trace-time) width,
-                # never casc.capacities — see CompiledCascade
-                caps = [idx.shape[0]] * (len(casc.model_fns) - 1)
-                return run_cascade_on_pyramid(
+                for r, src in steps:
+                    pyr[r] = resize_area(pyr[src], r)
+                labels = run_cascade_on_pyramid(
                     pyr, casc.model_fns, casc.thresholds, casc.reps,
                     caps)[0]
+                return labels, {r: pyr[r] for r in out_res}
             return fn
-        return self._slab_runner(("flush", casc.key, with_base, width),
-                                 make)
+        return self._slab_runner(
+            ("flush", casc.key, tuple(in_res), tuple(out_res), width),
+            make)
 
     def _slab_width(self, n_valid: int, cap: int | None = None) -> int:
         """Module-level ``slab_width`` bound to this engine's chunk."""
@@ -364,28 +440,39 @@ class ShardedScanEngine:
         devs = list(dict.fromkeys(self.devices))[:width]
         return jax.device_put_sharded(list(block), devs)
 
-    def _lockstep(self, cascades, plan: ShardPlan, stores, stats):
+    def _lockstep(self, cascades, plan: ShardPlan, stores, stats,
+                  monitor=None):
         """Stage-synchronous shard execution: every superstep stacks one
         bucketed index-slab per shard and issues a single pmap dispatch
         over the shard devices. Images are staged device-side once per
         group; only labels and the small non-base pyramid levels cross
         the host boundary. Host-side routing walks cached labels between
-        stages, exactly like the serial engine."""
+        stages, exactly like the serial engine — including the lazy
+        level schedule (level_schedule): later-stage-only levels are
+        first-touch derived inside the stage's flush dispatch and
+        shipped back only when a later stage carries them."""
         needed, union_res = stage_needs(cascades, self.images.shape[1])
-        for sh in stats.shards:     # same per-chunk materialization set
+        for sh in stats.shards:     # the STATIC union level set, same
             sh.pyramid_levels = union_res    # as the serial shard unit
+        schedule = level_schedule(cascades, self.images.shape[1],
+                                  self.local.lazy)
         width = min(plan.n_shards, max(len(set(self.devices)), 1))
         accepted: list[np.ndarray] = []
 
         for g0 in range(0, plan.n_shards, width):
             group = list(range(g0, min(g0 + width, plan.n_shards)))
             accepted += self._run_group(cascades, plan, group, width,
-                                        stores, stats, needed, union_res)
+                                        stores, stats, needed, schedule,
+                                        monitor)
         return accepted
 
     def _run_group(self, cascades, plan, group, width, stores, stats,
-                   needed, union_res):
+                   needed, schedule, monitor=None):
         import jax.numpy as jnp
+
+        from repro.core.transforms import resize_area
+
+        ingest_set, carry, derive = schedule
 
         k = len(cascades)
         chunk = self.chunk
@@ -430,6 +517,11 @@ class ShardedScanEngine:
         worklists: list[list[list]] = [[[] for _ in group]
                                        for _ in range(k)]
 
+        def count_levels(si, res, n):
+            lr = stats.shards[si].level_rows
+            for r in res:
+                lr[r] = lr.get(r, 0) + n
+
         def route(j, stage, ids, pos, rows):
             si = group[j]
             while len(ids):
@@ -444,20 +536,29 @@ class ShardedScanEngine:
                 st.rows_cached += int(known.sum())
                 unk = ~known
                 if unk.any():
-                    worklists[stage][j].append(
-                        (ids[unk], pos[unk],
-                         {r: rows[r][unk] for r in needed[stage]
-                          if r != base_hw}))
+                    sub = {r: rows[r][unk] for r in carry[stage]
+                           if r in rows}
+                    missing = [r for r in carry[stage] if r not in rows]
+                    if missing:
+                        # cache-skip backfill, exactly the serial
+                        # engine's feed(): rows that hopped over earlier
+                        # stages on cached labels never saw those
+                        # stages' flush-time derivation — pool their
+                        # carry levels straight from base
+                        imgs = jnp.asarray(self.images[ids[unk]])
+                        for r in missing:
+                            sub[r] = np.asarray(resize_area(imgs, r))
+                        count_levels(si, missing, int(unk.sum()))
+                    worklists[stage][j].append((ids[unk], pos[unk], sub))
                 keep = known & (cached == 1)
                 ids, pos = ids[keep], pos[keep]
                 rows = {r: v[keep] for r, v in rows.items()}
                 stage += 1
 
-        # ---- ingest: shard-local pyramid + fused cascade 0, lockstep --
+        # ---- ingest: fused pyramid + FULL cascade 0, lockstep ---------
         casc0 = cascades[0]
-        out_res = tuple(r for r in (needed[1] if k > 1 else [])
-                        if r != base_hw)
-        ingest = self._ingest_runner(casc0, union_res, out_res, width)
+        out_res = tuple(carry[1]) if k > 1 else ()
+        ingest = self._ingest_runner(casc0, out_res, width)
         n_steps = max(math.ceil(len(u) / chunk) for u in lanes if len(u))
         for t in range(n_steps):
             segs = [u[t * chunk:(t + 1) * chunk] for u in lanes]
@@ -475,6 +576,7 @@ class ShardedScanEngine:
                     continue
                 sh = stats.shards[si]
                 sh.chunks += 1
+                count_levels(si, ingest_set, nv)
                 st = sh.stages[0]
                 ids = segs[j]
                 pos = t * chunk + np.arange(nv)
@@ -491,6 +593,8 @@ class ShardedScanEngine:
                     stores[si].record(casc0.key, ids[unk], lab[unk])
                     st.rows_evaluated += int(unk.sum())
                     st.batches += 1
+                    if monitor is not None:
+                        monitor.observe(casc0.key, lab[unk])
                 use = np.where(known, cached, lab)
                 keep = use == 1
                 route(j, 1, ids[keep], pos[keep],
@@ -499,8 +603,18 @@ class ShardedScanEngine:
         # ---- stages 1..k-1: flush worklists in lockstep slabs ---------
         for s in range(1, k):
             casc = cascades[s]
-            flush = self._flush_runner(casc, base_hw, width)
-            res_small = [r for r in casc.resolutions if r != base_hw]
+            # host-carried small levels; the device program first-touch
+            # derives derive[s] (and regathers base when the cascade or
+            # a derivation reads it) — exactly the serial flush()
+            need_base = (base_hw in casc.resolutions
+                         or bool(derive[s]))
+            in_res = tuple(carry[s]) + ((base_hw,) if need_base else ())
+            down_carry = tuple(r for r in carry[s]
+                               if s + 1 < k and r in needed[s + 1])
+            out_dev = tuple(r for r in derive[s]
+                            if s + 1 < k and r in needed[s + 1])
+            flush = self._flush_runner(casc, base_hw, in_res, out_dev,
+                                       width)
             pend = []
             for j in range(len(group)):
                 segs = worklists[s][j]
@@ -509,7 +623,7 @@ class ShardedScanEngine:
                     pos = np.concatenate([p for _, p, _ in segs])
                     rows = {r: np.concatenate([rw[r]
                                                for _, _, rw in segs])
-                            for r in needed[s] if r != base_hw}
+                            for r in carry[s]}
                 else:
                     ids = np.empty(0, np.int64)
                     pos = np.empty(0, np.int64)
@@ -517,24 +631,25 @@ class ShardedScanEngine:
                 pend.append((ids, pos, rows))
             n_steps = max((math.ceil(len(p[0]) / chunk) for p in pend),
                           default=0)
-            down = [r for r in (needed[s + 1] if s + 1 < k else [])
-                    if r != base_hw]
             for t in range(n_steps):
                 sl = slice(t * chunk, (t + 1) * chunk)
                 segs = [(p[0][sl], p[1][sl]) for p in pend]
                 b = self._slab_width(max(len(x) for x, _ in segs))
                 idx = np.zeros((width, b), np.int32)
                 small = {r: np.zeros((width, b, r, r, 3), np.float32)
-                         for r in res_small}
+                         for r in carry[s]}
                 for j, (sids, spos) in enumerate(segs):
                     if not len(sids):
                         continue
                     idx[j, :len(sids)] = spos
-                    for r in res_small:
+                    for r in carry[s]:
                         small[r][j, :len(sids)] = pend[j][2][r][sl]
-                labels_all = np.asarray(flush(
+                labels_all, dev_levels = flush(
                     block, jnp.asarray(idx),
-                    {r: jnp.asarray(v) for r, v in small.items()}))
+                    {r: jnp.asarray(v) for r, v in small.items()})
+                labels_all = np.asarray(labels_all)
+                dev_levels = {r: np.asarray(v)
+                              for r, v in dev_levels.items()}
                 stats.supersteps += 1
                 for j, si in enumerate(group):
                     sids, spos = segs[j]
@@ -546,7 +661,13 @@ class ShardedScanEngine:
                     stores[si].record(casc.key, sids, lab)
                     st.rows_evaluated += nv
                     st.batches += 1
+                    count_levels(si, derive[s], nv)
+                    if monitor is not None:
+                        monitor.observe(casc.key, lab)
                     keep = lab == 1
-                    route(j, s + 1, sids[keep], spos[keep],
-                          {r: pend[j][2][r][sl][keep] for r in down})
+                    down = {r: pend[j][2][r][sl][keep]
+                            for r in down_carry}
+                    for r in out_dev:
+                        down[r] = dev_levels[r][j, :nv][keep]
+                    route(j, s + 1, sids[keep], spos[keep], down)
         return accepted

@@ -30,7 +30,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.transforms import plan_pyramid
+import numpy as np
+
+from repro.core.transforms import _GRAY, plan_pyramid
 from repro.kernels import resolve_interpret
 
 
@@ -135,3 +137,164 @@ def fused_pyramid_transform(images, rep_specs,
         interpret=resolve_interpret(interpret),
     )(images.astype(jnp.float32), *[cw for _, cw in specs])
     return tuple(out) if isinstance(out, (list, tuple)) else (out,)
+
+
+# ------------------------------------------- fused pyramid + stage-0 pass --
+# One HBM read of the base image emits (a) the raw pooled RGB pyramid
+# levels the scan engine carries between cascade stages and (b) the
+# stage-0 cascade model's sigmoid scores, with the small CNN folded into
+# the kernel epilogue: conv3x3-SAME as im2col + one MXU dot per layer,
+# maxpool2 as a reshape-max, dense + output head as two more dots.
+# Weights ride in as kernel operands; the int8 path carries int8 weight
+# tensors and dequantizes at use (per-tensor scale baked in as a trace
+# constant — models/cnn.quantize_cnn).
+
+def color_weight_matrix(color: str) -> np.ndarray:
+    """(3, C') channel-projection matrix matching core.transforms.
+    color_transform exactly (identity / unit column / gray weights)."""
+    if color == "rgb":
+        return np.eye(3, dtype=np.float32)
+    if color == "gray":
+        return _GRAY.reshape(3, 1).astype(np.float32)
+    idx = {"r": 0, "g": 1, "b": 2}[color]
+    w = np.zeros((3, 1), np.float32)
+    w[idx, 0] = 1.0
+    return w
+
+
+def _conv3x3_relu_pool(x, w, b):
+    """relu(conv3x3-SAME(x, w) + b) then maxpool2, in Mosaic-lowerable
+    ops only: im2col (9 static shifted slices of the zero-padded input)
+    + one dot_general, reshape-max for the pool.
+    x (H, W, Cin) f32; w (3, 3, Cin, Cout) f32; b (Cout,)."""
+    h, wd, cin = x.shape
+    cout = w.shape[-1]
+    xp = jnp.pad(x, ((1, 1), (1, 1), (0, 0)))
+    patches = jnp.concatenate(
+        [xp[dy:dy + h, dx:dx + wd, :]
+         for dy in range(3) for dx in range(3)], axis=-1)   # (H, W, 9*Cin)
+    y = jax.lax.dot_general(
+        patches.reshape(h * wd, 9 * cin), w.reshape(9 * cin, cout),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).reshape(h, wd, cout)
+    y = jnp.maximum(y + b, 0.0)
+    return y.reshape(h // 2, 2, wd // 2, 2, cout).max(axis=(1, 3))
+
+
+def _pyramid_stage0_kernel(img_ref, cw_ref, *refs, base: int, plan,
+                           out_res, s0_res: int, n_conv: int, scales):
+    """refs = (w_0, b_0, ..., dense_w, dense_b, out_w, out_b,
+               out_ref_0..out_ref_{n-1}, score_ref).
+    scales: per-weight-tensor dequant scales (conv..., dense, out) for the
+    int8 path, or None when weights arrive as f32."""
+    n_w = 2 * n_conv + 4
+    w_refs, out_refs = refs[:n_w], refs[n_w:]
+
+    def weight(k, si):
+        w = w_refs[k][...]
+        if scales is not None:
+            w = w.astype(jnp.float32) * scales[si]
+        return w
+
+    img = img_ref[0]                                   # (H, H, 3)
+    levels = {base: img}
+    for res, src in plan:                              # unrolled at trace
+        levels[res] = _pool(levels[src], res)
+    for i, res in enumerate(out_res):
+        out_refs[i][0] = levels[res]
+
+    # ---- stage-0 epilogue: color-project the level-0 input, run the CNN
+    cw = cw_ref[...]                                   # (3, C)
+    x = jax.lax.dot_general(
+        levels[s0_res].reshape(s0_res * s0_res, 3), cw,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32
+    ).reshape(s0_res, s0_res, cw.shape[1])
+    k = 0
+    for li in range(n_conv):
+        x = _conv3x3_relu_pool(x, weight(k, li), w_refs[k + 1][...].reshape(-1))
+        k += 2
+    flat = x.reshape(1, -1)
+    hdn = jnp.maximum(
+        jax.lax.dot_general(flat, weight(k, n_conv),
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+        + w_refs[k + 1][...].reshape(-1), 0.0)
+    logit = (jax.lax.dot_general(hdn, weight(k + 2, n_conv + 1),
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+             + w_refs[k + 3][...].reshape(-1))[0, 0]
+    out_refs[-1][0, 0] = jax.nn.sigmoid(logit)
+
+
+def _stage0_weight_operands(params, qparams):
+    """Flatten stage-0 CNN weights into kernel operands. Returns
+    (tensors, scales, n_conv); scales is None on the f32 path."""
+    if qparams is not None:
+        tensors, scales = [], []
+        for l in qparams["conv"]:
+            tensors += [l["w"]["q"], jnp.reshape(l["b"], (1, -1))]
+            scales.append(float(l["w"]["scale"]))
+        tensors += [qparams["dense_w"]["q"],
+                    jnp.reshape(qparams["dense_b"], (1, -1))]
+        scales.append(float(qparams["dense_w"]["scale"]))
+        tensors += [qparams["out_w"]["q"],
+                    jnp.reshape(qparams["out_b"], (1, -1))]
+        scales.append(float(qparams["out_w"]["scale"]))
+        return tensors, tuple(scales), len(qparams["conv"])
+    tensors = []
+    for l in params["conv"]:
+        tensors += [jnp.asarray(l["w"], jnp.float32),
+                    jnp.reshape(l["b"], (1, -1))]
+    tensors += [jnp.asarray(params["dense_w"], jnp.float32),
+                jnp.reshape(params["dense_b"], (1, -1)),
+                jnp.asarray(params["out_w"], jnp.float32),
+                jnp.reshape(params["out_b"], (1, -1))]
+    return tensors, None, len(params["conv"])
+
+
+def fused_pyramid_stage0(images, out_res, params, rep, *, qparams=None,
+                         interpret: bool | None = None):
+    """ONE Pallas pass per batch element: raw RGB (B, H, H, 3) float32 ->
+    ({res: (B, res, res, 3) raw pooled RGB level for res in out_res},
+     stage-0 sigmoid scores (B,)).
+
+    Levels are the engine's carry currency — raw [0,1] pooled RGB, bit-
+    identical to core.transforms.materialize_pyramid (NOT the normalized
+    projected reps fused_pyramid_transform emits). ``rep`` names the
+    stage-0 model's input representation; its resolution is materialized
+    in-VMEM even when not in ``out_res``. ``qparams`` (models/cnn.
+    quantize_cnn output) selects the int8 weight path."""
+    b, h, w, _ = images.shape
+    assert h == w, (h, w)
+    out_res = [int(r) for r in out_res]
+    s0_res = int(rep.resolution)
+    need = set(out_res) | {s0_res}
+    plan = tuple((s.resolution, s.source)
+                 for s in plan_pyramid(need, h))
+    tensors, scales, n_conv = _stage0_weight_operands(params, qparams)
+    cw = jnp.asarray(color_weight_matrix(rep.color))
+    kernel = functools.partial(
+        _pyramid_stage0_kernel, base=h, plan=plan, out_res=tuple(out_res),
+        s0_res=s0_res, n_conv=n_conv, scales=scales)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=(
+            [pl.BlockSpec((1, h, w, 3), lambda i: (i, 0, 0, 0)),
+             pl.BlockSpec(cw.shape, lambda i: (0, 0))]
+            + [pl.BlockSpec(t.shape, lambda i, _n=t.ndim: (0,) * _n)
+               for t in tensors]),
+        out_specs=(
+            [pl.BlockSpec((1, res, res, 3),
+                          lambda i, _r=res: (i, 0, 0, 0))
+             for res in out_res]
+            + [pl.BlockSpec((1, 1), lambda i: (i, 0))]),
+        out_shape=(
+            [jax.ShapeDtypeStruct((b, res, res, 3), jnp.float32)
+             for res in out_res]
+            + [jax.ShapeDtypeStruct((b, 1), jnp.float32)]),
+        interpret=resolve_interpret(interpret),
+    )(images.astype(jnp.float32), cw, *tensors)
+    return ({res: out[i] for i, res in enumerate(out_res)},
+            out[-1][:, 0])

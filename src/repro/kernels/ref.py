@@ -23,6 +23,23 @@ def fused_pyramid_transform_ref(images, rep_specs,
                  for res, cw in rep_specs)
 
 
+def fused_pyramid_stage0_ref(images, out_res, params, rep, qparams=None):
+    """Oracle for the fused pyramid+stage-0 kernel: the unfused
+    materialize_pyramid -> color_transform -> cnn_predict_proba chain.
+    With ``qparams`` the weights are dequantized first (weight-only int8:
+    the reference arithmetic stays f32, matching the kernel's
+    dequantize-at-use)."""
+    from repro.core.transforms import color_transform, materialize_pyramid
+    from repro.models.cnn import cnn_predict_proba, dequantize_cnn
+    p = dequantize_cnn(qparams) if qparams is not None else params
+    out_res = [int(r) for r in out_res]
+    levels = materialize_pyramid(images.astype(jnp.float32),
+                                 set(out_res) | {int(rep.resolution)})
+    scores = cnn_predict_proba(
+        p, color_transform(levels[int(rep.resolution)], rep.color))
+    return {r: levels[r] for r in out_res}, scores
+
+
 def matmul_ref(a, b, out_dtype=None):
     out = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
     return out.astype(out_dtype or a.dtype)

@@ -77,6 +77,49 @@ def cnn_flops(cfg: TahomaCNNConfig) -> float:
     return total
 
 
+def quantize_cnn(params):
+    """Weight-only int8 quantization (per-tensor symmetric, scale =
+    absmax/127). Biases stay float32 — they are tiny and additive.
+
+    Returns a pytree mirroring ``params`` where every weight tensor is
+    replaced by ``{"q": int8, "scale": f32 scalar}``. Dequantize-at-use
+    (``dequantize_cnn``) keeps the arithmetic in f32, so the deviation
+    from the f32 model is bounded by the weight rounding alone — the
+    calibrated tolerance pinned in benchmarks/calibrated_int8_stage0.json.
+    """
+    def q(w):
+        w = jnp.asarray(w, jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8) / 127.0
+        return {"q": jnp.clip(jnp.round(w / scale), -127, 127
+                              ).astype(jnp.int8),
+                "scale": scale.astype(jnp.float32)}
+
+    return {
+        "conv": [{"w": q(l["w"]), "b": jnp.asarray(l["b"], jnp.float32)}
+                 for l in params["conv"]],
+        "dense_w": q(params["dense_w"]),
+        "dense_b": jnp.asarray(params["dense_b"], jnp.float32),
+        "out_w": q(params["out_w"]),
+        "out_b": jnp.asarray(params["out_b"], jnp.float32),
+    }
+
+
+def dequantize_cnn(qparams):
+    """Inverse of ``quantize_cnn`` up to rounding: int8 weights back to
+    f32 (``q * scale``), shaped exactly like ``init_cnn`` output so the
+    result feeds ``cnn_forward`` unchanged."""
+    def dq(t):
+        return t["q"].astype(jnp.float32) * t["scale"]
+
+    return {
+        "conv": [{"w": dq(l["w"]), "b": l["b"]} for l in qparams["conv"]],
+        "dense_w": dq(qparams["dense_w"]),
+        "dense_b": qparams["dense_b"],
+        "out_w": dq(qparams["out_w"]),
+        "out_b": qparams["out_b"],
+    }
+
+
 def bce_loss(params, images, labels):
     """Numerically-stable binary cross-entropy (labels in {0,1})."""
     logits = cnn_forward(params, images)

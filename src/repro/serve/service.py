@@ -338,8 +338,8 @@ class AsyncCascadeService:
         labels out."""
         key = (casc.key, width, variant)
         if key not in self._fns:
-            from repro.core.executor import run_cascade_on_pyramid
-            from repro.core.transforms import materialize_pyramid
+            from repro.core.executor import (make_fused_ingest,
+                                             run_cascade_on_pyramid)
 
             res = tuple(casc.resolutions)
             base_hw = self.images.shape[1]
@@ -347,20 +347,23 @@ class AsyncCascadeService:
             caps = [width] * (len(casc.model_fns) - 1)
 
             if variant == "base":
-                def fn(imgs):
-                    pyr = materialize_pyramid(imgs, res)
-                    labels = run_cascade_on_pyramid(
-                        {r: pyr[r] for r in res}, casc.model_fns,
-                        casc.thresholds, casc.reps, caps)[0]
-                    return labels, {r: pyr[r] for r in small}
+                # the same fused flush-assembly program the scan
+                # engines' chunk ingest uses (executor.make_fused_ingest
+                # — the Pallas pyramid+stage-0 pass on TPU with real
+                # CNN params): one program pools the pyramid, runs the
+                # cascade, and emits the freshly pooled small levels
+                # for the repcache
+                fn = make_fused_ingest(
+                    casc.model_fns, casc.thresholds, casc.reps, caps,
+                    small, stage0=casc.stage0, jit=self.jit)
             else:
                 def fn(pyr):
                     return run_cascade_on_pyramid(
                         pyr, casc.model_fns, casc.thresholds, casc.reps,
                         caps)[0]
-            if self.jit:
-                import jax
-                fn = jax.jit(fn)
+                if self.jit:
+                    import jax
+                    fn = jax.jit(fn)
             self._fns[key] = fn
         return self._fns[key]
 

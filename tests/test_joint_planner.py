@@ -273,13 +273,16 @@ def test_joint_plan_matches_oracle_and_never_worse(trained, costing):
     assert joint.costing == costing
     assert all(p.decomposed is not None for p in joint.predicates)
     # never worse than the independent plan, in the same costing mode
+    # (rep charges always at the lazy first-touch survival weight —
+    # dense_reps=False — matching the engines' level_schedule; the
+    # costing modes differ only in dense_levels)
     ind_as_joint = joint_scan_cost(
         [systems[p.cascade.concept].decomposed_cost(
             systems[p.cascade.concept].cascade_space("CAMERA"),
             p.selection.index, "CAMERA", dense_levels=dense)
          for p in ind.predicates],
         [p.cascade.selectivity for p in ind.predicates],
-        dense_reps=dense)
+        dense_reps=False)
     assert joint.estimated_cost_per_row() <= ind_as_joint + 1e-15
     # brute-force oracle over (pool product x order) on the real spaces
     pools = []
@@ -293,7 +296,7 @@ def test_joint_plan_matches_oracle_and_never_worse(trained, costing):
                                   system.p_low, system.p_high))
             for c in select_candidates(space, min_accuracy=0.6)])
     assert joint.estimated_cost_per_row() == pytest.approx(
-        _oracle(pools, dense_reps=dense), rel=1e-9)
+        _oracle(pools, dense_reps=False), rel=1e-9)
     # savings baseline is priced in the same mode: never negative
     assert joint.unshared_cost_per_row() >= \
         joint.estimated_cost_per_row() - 1e-15
@@ -335,6 +338,35 @@ def test_joint_explain_prints_savings(trained):
     # level_set is the union of the cascades' resolutions
     want = {r.resolution for c in joint.cascades for r in c.reps}
     assert set(joint.level_set) == want
+
+
+def test_explain_renders_estimated_vs_actual_levels(trained):
+    """DESIGN.md §13: explain(base_hw=, actual=) renders the lazy level
+    schedule and per-level estimated-vs-actual materialization counts,
+    and the engine-costing contract holds — the measured level_rows
+    equal materialization_schedule's first-touch prediction exactly on
+    a cold scan."""
+    specs, systems, qx, metadata = trained
+    _, joint = _plan_pair(trained)
+    base_hw = qx.shape[1]
+    eng = ScanEngine(qx, metadata, chunk=32)
+    res = eng.execute(joint.cascades, joint.metadata_eq)
+    txt = joint.explain(n_rows=len(qx), base_hw=base_hw,
+                        actual=res.stats)
+    assert "lazy level schedule" in txt
+    assert "level rows:" in txt and "actual" in txt
+    sched = joint.materialization_schedule(base_hw)
+    assert set(sched) == set(joint.level_set) - {base_hw}
+    for r, s in sched.items():
+        want = (res.stats.rows_scanned if s == 0
+                else res.stats.stages[s].rows_evaluated)
+        assert res.stats.level_rows.get(r, 0) == want
+    # the prior estimate exists for every scheduled level
+    est = joint.expected_level_rows(res.stats.rows_scanned, base_hw)
+    assert set(est) == set(sched)
+    # without actual= the schedule/estimate lines still render
+    assert "lazy level schedule" in joint.explain(n_rows=len(qx),
+                                                  base_hw=base_hw)
 
 
 def test_joint_plan_rows_identical_across_engines(trained):
@@ -420,11 +452,18 @@ def test_joint_plan_labels_identical_async_service(trained):
 
 
 # ------------------------------------------- materialize-once regression --
-def test_shared_levels_materialized_once_per_chunk(trained, monkeypatch):
+@pytest.mark.parametrize("lazy", [False, True])
+def test_shared_levels_materialized_once_per_chunk(trained, monkeypatch,
+                                                   lazy):
     """Invocation-counting: per chunk there is exactly ONE pyramid
-    materialization and it covers the union level set — predicates never
-    re-materialize shared levels."""
+    materialization and it covers exactly the ingest schedule —
+    predicates never re-materialize shared levels. Eager: the whole
+    union level set at ingest (the pre-lazy behavior). Lazy: only the
+    FIRST cascade's levels; later-stage-only levels are first-touch
+    derived inside the flush (resize_area), never through a second
+    materialize_pyramid call."""
     import repro.engine.scan as scan_mod
+    from repro.engine.scan import level_schedule
 
     specs, systems, qx, metadata = trained
     _, joint = _plan_pair(trained)
@@ -436,14 +475,19 @@ def test_shared_levels_materialized_once_per_chunk(trained, monkeypatch):
         return real(img, resolutions)
 
     monkeypatch.setattr(scan_mod, "materialize_pyramid", counting)
-    eng = ScanEngine(qx, metadata, chunk=32, jit=False)
+    eng = ScanEngine(qx, metadata, chunk=32, jit=False, lazy=lazy)
     res = eng.execute(joint.cascades, joint.metadata_eq)
     n_meta = int((metadata["cam"] == 0).sum())
     want_chunks = math.ceil(n_meta / 32)
     assert res.stats.chunks == want_chunks
     assert len(calls) == want_chunks               # ONE per chunk
-    union = set(joint.level_set) | {qx.shape[1]}
-    assert all(set(c) == union for c in calls)     # covering the union
+    ingest_set, _, _ = level_schedule(joint.cascades, qx.shape[1], lazy)
+    assert all(set(c) == set(ingest_set) for c in calls)
+    if not lazy:    # eager ingest covers the whole non-base union
+        assert set(ingest_set) == set(joint.level_set) - {qx.shape[1]}
+    # the static union is reported either way
+    assert set(res.stats.pyramid_levels) == \
+        set(joint.level_set) | {qx.shape[1]}
 
 
 # ------------------------------------------------- online re-ordering -----
