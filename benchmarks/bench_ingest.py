@@ -1,0 +1,220 @@
+"""Streaming ingest-time indexing benchmark (DESIGN.md §14): how much
+query-time work does ingest-time indexing (temporal skip detector +
+stage-0 candidate-concept index, engine/ingest.py) remove from a
+multi-predicate query vs the cold scan — and does the exactness escape
+hatch hold? Writes ``BENCH_ingest.json`` at the repo root.
+
+  PYTHONPATH=src python -m benchmarks.bench_ingest [--quick]
+
+Protocol: one TAHOMA system per concept, a joint-planned 3-predicate
+query; a simulated camera stream (piecewise-constant scenes + dyadic
+sensor jitter) is ingested chunk-by-chunk; the SAME planned query then
+runs three ways on fresh engines:
+
+  cold           — no index, full scan (the baseline);
+  indexed exact  — ingest-decided stage-0 labels seed the store and
+                   prune decided-0 rows; skip-aliased rows re-verified.
+                   The row set MUST be bit-identical to the cold scan
+                   and naive_scan (SystemExit otherwise — this is the
+                   CI exactness gate);
+  indexed approx — skip-alias label propagation + candidate pruning at
+                   the pinned recall knob (prune_margin 0.25). The
+                   headline: fraction of query-time model invocations
+                   (rows evaluated through any cascade stage)
+                   eliminated vs cold, at the measured recall.
+
+Timings are WARM (jit compiled); work metrics (rows evaluated, chunks)
+are deterministic. A serving block seeds an AsyncCascadeService from
+the index and reports the store-hit rate over the full corpus."""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+from bench_query_engine import build_systems  # noqa: E402
+
+from repro.core.pipeline import build_ingest_pipeline  # noqa: E402
+from repro.data.synthetic import (DEFAULT_PREDICATES,  # noqa: E402
+                                  make_camera_stream)
+from repro.engine import (PredicateClause, QuerySpec, ScanEngine,  # noqa: E402
+                          naive_scan, plan_query)
+from repro.engine.ingest import indexed_execute  # noqa: E402
+
+ROOT = Path(__file__).resolve().parents[1]
+OUT = ROOT / "BENCH_ingest.json"
+QUICK_DIR = ROOT / "artifacts" / "bench"
+
+
+def _time(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def bench(systems, specs, n_frames: int, *, chunk: int,
+          repeats: int = 3, log=print) -> dict:
+    frames, truth, scene = make_camera_stream(specs, n_frames, hw=32,
+                                              seed=7)
+    for floor in (0.8, None):
+        spec_q = QuerySpec(metadata_eq={}, predicates=[
+            PredicateClause(s.name, min_accuracy=floor) for s in specs])
+        try:
+            plan = plan_query(systems, spec_q, joint=True)
+            break
+        except ValueError:
+            log(f"[bench] no cascade clears min_accuracy={floor}; "
+                f"relaxing")
+
+    # ---------------------------------------------------------- ingest --
+    pipe = build_ingest_pipeline(plan.cascades, n_frames, chunk=chunk)
+    ids = np.arange(n_frames)
+    pipe.ingest(frames[:chunk], ids[:chunk])          # warm the jit
+    pipe2 = build_ingest_pipeline(plan.cascades, n_frames, chunk=chunk)
+    t_ingest = _time(lambda: pipe2.run(frames, ids))
+    pipe = pipe2                                      # the timed, full run
+    st = pipe.stats
+    log(f"[bench] ingest {n_frames} frames in {t_ingest:.2f}s "
+        f"({n_frames / t_ingest:.0f} frames/s): {st.skipped} aliased, "
+        f"{st.refs} scored, {st.decided_labels} labels decided")
+
+    # ---------------------------------------------------- three queries --
+    def run(index_mode=None):
+        eng = ScanEngine(frames, chunk=chunk)
+        if index_mode is None:
+            return eng, (lambda: (eng.reset_cache(),
+                                  eng.execute(plan.cascades, {}))[1])
+        p = plan_query(systems, spec_q, joint=True, index=pipe.index,
+                       index_mode=index_mode)
+        return eng, (lambda: (eng.reset_cache(),
+                              indexed_execute(eng, p))[1])
+
+    results, times = {}, {}
+    for mode in (None, "exact", "approx"):
+        name = mode or "cold"
+        eng, go = run(mode)
+        results[name] = go()                          # warm + stats
+        times[name] = min(_time(go) for _ in range(repeats))
+
+    cold, exact, approx = (results[k] for k in ("cold", "exact",
+                                                "approx"))
+    ref = naive_scan(frames, plan.cascades, chunk=chunk)
+    exact_identical = (bool(np.array_equal(exact.indices, cold.indices))
+                       and bool(np.array_equal(cold.indices, ref)))
+    if not exact_identical:
+        raise SystemExit(
+            "[bench] EXACTNESS GATE FAILED: indexed exact-mode row set "
+            "diverged from the cold scan / naive reference")
+
+    inter = len(np.intersect1d(approx.indices, cold.indices))
+    recall = inter / max(len(cold.indices), 1)
+    prec = inter / max(len(approx.indices), 1)
+    evals = {k: int(r.stats.rows_evaluated) for k, r in results.items()}
+    elim = {k: round(100 * (1 - evals[k] / max(evals["cold"], 1)), 1)
+            for k in ("exact", "approx")}
+    log(f"[bench] rows evaluated: cold {evals['cold']} | exact "
+        f"{evals['exact']} (-{elim['exact']}%) | approx "
+        f"{evals['approx']} (-{elim['approx']}%) at recall "
+        f"{recall:.3f}")
+
+    # ------------------------------------------- index-seeded serving --
+    from repro.serve.batcher import Request
+    from repro.serve.service import AsyncCascadeService
+
+    svc = AsyncCascadeService(frames,
+                              {c.concept: c for c in plan.cascades},
+                              shards=2, ingest_index=pipe.index)
+    rid = 0
+    for c in plan.cascades:
+        for row in range(n_frames):
+            svc.submit(c.concept, Request(rid=rid, payload=row))
+            rid += 1
+    agg = svc.summary()
+    log(f"[bench] serving: {agg['requests']} requests -> "
+        f"{agg['store_hits']} answered from the ingest index "
+        f"({100 * agg['store_hit_rate']:.0f}%)")
+
+    return {
+        "frames": n_frames,
+        "scenes": int(scene.max() + 1),
+        "chunk": chunk,
+        "predicates": len(specs),
+        "min_accuracy": floor,
+        "prune_margin": pipe.index.prune_margin,
+        "skip_threshold": pipe.skip_threshold,
+        "ingest_s": round(t_ingest, 4),
+        "ingest_frames_per_s": round(n_frames / t_ingest, 1),
+        "skip_aliased": st.skipped,
+        "skip_aliased_frac": round(st.skipped / n_frames, 3),
+        "refs_scored": st.refs,
+        "stage0_scores": st.stage0_scores,
+        "decided_labels": st.decided_labels,
+        "matches_cold": int(len(cold.indices)),
+        "exact_identical": exact_identical,
+        "rows_evaluated": evals,
+        "invocations_eliminated_exact_pct": elim["exact"],
+        "invocations_eliminated_approx_pct": elim["approx"],
+        "approx_recall_vs_cold": round(recall, 4),
+        "approx_precision_vs_cold": round(prec, 4),
+        "measured_recall_per_concept": {
+            s.name: round(pipe.index.measured_recall(s.name,
+                                                     truth[:, k]), 4)
+            for k, s in enumerate(specs)},
+        "cold_s": round(times["cold"], 4),
+        "exact_s": round(times["exact"], 4),
+        "approx_s": round(times["approx"], 4),
+        "speedup_exact_x": round(times["cold"] / times["exact"], 2),
+        "speedup_approx_x": round(times["cold"] / times["approx"], 2),
+        "serving": {
+            "requests": int(agg["requests"]),
+            "store_hits": int(agg["store_hits"]),
+            "store_hit_rate": round(agg["store_hit_rate"], 4),
+            "rows_evaluated": int(agg["rows_evaluated"]),
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller stream/training (CI smoke); writes "
+                         "under artifacts/bench/, never the headline")
+    ap.add_argument("--chunk", type=int, default=64)
+    args = ap.parse_args()
+
+    import jax
+    specs = DEFAULT_PREDICATES[:3]
+    systems = build_systems(specs, steps=30 if args.quick else 60,
+                            n_train=160 if args.quick else 240, hw=32)
+    n_frames = 384 if args.quick else 1536
+
+    report = {
+        "backend": jax.default_backend(),
+        "query": "SELECT frames WHERE "
+                 + " AND ".join(f"contains({s.name})" for s in specs),
+        "metric": "rows evaluated through any cascade stage (model "
+                  "invocations) for the same planned query: cold scan "
+                  "vs ingest-indexed exact/approx modes",
+        **bench(systems, specs, n_frames, chunk=args.chunk),
+    }
+    if args.quick:
+        QUICK_DIR.mkdir(parents=True, exist_ok=True)
+        out = QUICK_DIR / OUT.with_suffix(".quick.json").name
+    else:
+        out = OUT
+    out.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"wrote {out}  (approx mode eliminates "
+          f"{report['invocations_eliminated_approx_pct']}% of "
+          f"invocations at recall {report['approx_recall_vs_cold']}, "
+          f"exact mode bit-identical: {report['exact_identical']})")
+
+
+if __name__ == "__main__":
+    main()

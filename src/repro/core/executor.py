@@ -220,7 +220,7 @@ def make_fused_ingest(model_fns: Sequence[Callable], thresholds,
                       *, stage0: Stage0 | None = None,
                       materialize: Callable | None = None,
                       use_kernel: bool | None = None, int8: bool = False,
-                      jit: bool = True):
+                      jit: bool = True, emit_scores: bool = False):
     """Build the fused per-chunk ingest: fn(imgs (B,H,H,3)) ->
     (labels (B,), {res: (B,res,res,3) raw pooled level for res in
     out_res}).
@@ -234,7 +234,13 @@ def make_fused_ingest(model_fns: Sequence[Callable], thresholds,
     core.transforms.materialize_pyramid. ``use_kernel=None`` resolves to
     True on TPU when ``stage0`` carries real CNN params. ``int8`` swaps
     stage-0's weights for the int8-quantized copy (dequantize-at-use;
-    requires ``stage0.qparams``)."""
+    requires ``stage0.qparams``). ``emit_scores=True`` additionally
+    returns the raw level-0 probability scores (B,) as a third output —
+    on the kernel path they are the Pallas epilogue's ``s0`` for free;
+    on the unfused path level 0 is scored explicitly and fed back via
+    ``level0_scores`` so the composed program stays bit-identical. The
+    ingest-time indexing pipeline (engine/ingest.py) consumes the
+    scores for confident stage-0 decisions and candidate ranking."""
     out_res = [int(r) for r in out_res]
     need = sorted({r.resolution for r in reps} | set(out_res))
     if use_kernel is None:
@@ -267,14 +273,29 @@ def make_fused_ingest(model_fns: Sequence[Callable], thresholds,
             labels, _ = run_cascade_on_pyramid(
                 pyr, model_fns, thresholds, reps, capacities,
                 level0_scores=s0)
-            return labels, {r: pyr[r] for r in out_res}
+            emitted = {r: pyr[r] for r in out_res}
+            if emit_scores:
+                return labels, emitted, s0
+            return labels, emitted
     else:
         def run(imgs):
             base = imgs.shape[1]
             pyr = dict(mat(imgs, [r for r in need if r != base]))
             pyr.setdefault(base, imgs)
+            s0 = None
+            if emit_scores:
+                # score level 0 explicitly (same input derivation as
+                # run_cascade_on_pyramid's get_input) and feed it back
+                # as level0_scores — the composition is the identical
+                # jnp program, so labels stay bit-exact
+                s0 = model_fns[0](color_transform(
+                    pyr[reps[0].resolution], reps[0].color))
             labels, _ = run_cascade_on_pyramid(
-                pyr, model_fns, thresholds, reps, capacities)
-            return labels, {r: pyr[r] for r in out_res}
+                pyr, model_fns, thresholds, reps, capacities,
+                level0_scores=s0)
+            emitted = {r: pyr[r] for r in out_res}
+            if emit_scores:
+                return labels, emitted, s0
+            return labels, emitted
 
     return jax.jit(run) if jit else run

@@ -344,7 +344,11 @@ def build_cascade_service(images, cascades, *, mode: str = "async",
     straight to AsyncCascadeService — ``queue_limit``, ``overload``,
     ``ladders`` (e.g. from ``TahomaSystem.compiled_ladder``),
     ``degrade`` (a DegradeConfig), ``batch_timeout_s``,
-    ``request_deadline_s``, ``dispatch_retries``, ``faults``.
+    ``request_deadline_s``, ``dispatch_retries``, ``faults``, and the
+    ingest-index seeds ``ingest_index``/``ingest_exact`` (DESIGN.md
+    §14: a CandidateIndex built by build_ingest_pipeline seeds the
+    service store so ingest-decided rows answer at submit with zero
+    model invocations).
     ``host=True`` wraps the service in a started wall-clock EventHost
     (serve/host.py) so deadlines fire without caller cooperation; the
     caller gets the HOST (``host.service`` reaches the service) and
@@ -374,3 +378,30 @@ def build_cascade_service(images, cascades, *, mode: str = "async",
         from repro.serve.host import EventHost
         return EventHost(service).start()
     return service
+
+
+def build_ingest_pipeline(cascades, n_rows: int, *, chunk: int = 64,
+                          skip: bool = True, skip_threshold: float = 0.008,
+                          top_k: int | None = None,
+                          prune_margin: float = 0.25, jit: bool = True,
+                          int8: bool = False,
+                          use_kernel: bool | None = None):
+    """System-level ingest factory (DESIGN.md §14): a streaming
+    IngestPipeline over the planned ``cascades`` (a sequence, or a
+    {concept -> CompiledCascade} table as built for serving) for a
+    corpus/stream of ``n_rows`` frames. Feed arriving frames with
+    ``.ingest(frames, ids)`` (any batch granularity — the temporal skip
+    detector chains across calls) or sweep a resident corpus with
+    ``.run(images)``; the resulting ``.index`` plugs into
+    ``plan_query(..., index=...)`` and ``build_cascade_service(...,
+    ingest_index=...)``. The cascades must be the SAME physical
+    cascades queries will select — labels are keyed by
+    CompiledCascade.key."""
+    from repro.engine.ingest import IngestPipeline
+
+    if isinstance(cascades, dict):
+        cascades = list(cascades.values())
+    return IngestPipeline(cascades, n_rows, chunk=chunk, skip=skip,
+                          skip_threshold=skip_threshold, top_k=top_k,
+                          prune_margin=prune_margin, jit=jit, int8=int8,
+                          use_kernel=use_kernel)

@@ -107,6 +107,50 @@ def make_multi_corpus(specs, n: int, hw: int = 32, seed: int = 0,
     return x, labels
 
 
+def make_camera_stream(specs, n_frames: int, hw: int = 32, seed: int = 0,
+                       positive_rate: float = 0.5, hold_max: int = 4,
+                       jitter: int = 1):
+    """Simulated camera stream for the ingest pipeline (engine/ingest.py):
+    piecewise-constant scenes. Each DISTINCT scene frame is drawn like a
+    ``make_multi_corpus`` row (quantized to k/256 dyadics) and held for a
+    random 1..hold_max consecutive frames; held repeats get independent
+    per-pixel ±jitter/256 sensor noise — dyadic steps on the dyadic grid,
+    so pyramid derivation stays bit-exact (DESIGN.md §3.1) while frames
+    within a scene are near- but not bit-identical (what a temporal
+    difference detector must tolerate). Scene CHANGES replace the clutter
+    and the predicate textures entirely, so cross-scene frame differences
+    are orders of magnitude above the jitter — the detector's separation
+    margin. Returns (frames (N,hw,hw,3), labels (N,K) int32,
+    scene_id (N,) int64); held frames share their scene's labels."""
+    rng = np.random.default_rng(seed + 1_000_003)
+    holds = []
+    while sum(holds) < n_frames:
+        holds.append(int(rng.integers(1, max(2, hold_max + 1))))
+    scenes_x, scenes_y = make_multi_corpus(specs, len(holds), hw=hw,
+                                           seed=seed,
+                                           positive_rate=positive_rate,
+                                           quantize=True)
+    frames = np.empty((n_frames, hw, hw, 3), np.float32)
+    labels = np.empty((n_frames, len(specs)), np.int32)
+    scene_id = np.empty(n_frames, np.int64)
+    t = 0
+    for s, hold in enumerate(holds):
+        for _ in range(hold):
+            if t == n_frames:
+                break
+            f = scenes_x[s]
+            if jitter and t and scene_id[t - 1] == s:
+                # held repeat: ±jitter/256 dyadic sensor noise
+                delta = rng.integers(-jitter, jitter + 1,
+                                     size=f.shape).astype(np.float32)
+                f = np.clip(f + delta / 256.0, 0.0, 1.0)
+            frames[t] = f
+            labels[t] = scenes_y[s]
+            scene_id[t] = s
+            t += 1
+    return frames, labels, scene_id
+
+
 def three_way_split(x, y, seed: int = 0, frac=(0.5, 0.25, 0.25)):
     """train / config(thresholds) / eval — paper §V-A's three splits."""
     rng = np.random.default_rng(seed)

@@ -1,6 +1,8 @@
 """Query engine (DESIGN.md §4, §11): logical→physical planner (joint or
 independent cascade selection) + unified multi-predicate scan executor
 over physically-optimized cascades."""
+from repro.engine.ingest import (CandidateIndex, IngestPipeline,
+                                 frame_signature, indexed_execute)
 from repro.engine.planner import (OnlineReorderer, PhysicalPlan,
                                   PlannedPredicate, PredicateClause,
                                   QuerySpec, expected_scan_cost,
@@ -14,11 +16,13 @@ from repro.engine.sharded import (ShardedScanEngine, ShardedScanResult,
                                   ShardedScanStats)
 
 __all__ = [
-    "CompiledCascade", "OnlineReorderer", "PhysicalPlan",
+    "CandidateIndex", "CompiledCascade", "IngestPipeline",
+    "OnlineReorderer", "PhysicalPlan",
     "PlannedPredicate", "PredicateClause", "QuerySpec", "ScanEngine",
     "ScanResult", "ScanStats", "ShardedScanEngine", "ShardedScanResult",
     "ShardedScanStats", "VirtualColumnStore", "expected_scan_cost",
-    "joint_scan_cost", "make_batch_runner", "naive_scan",
+    "frame_signature", "indexed_execute", "joint_scan_cost",
+    "make_batch_runner", "naive_scan",
     "order_predicates", "order_predicates_shared", "plan_query",
     "predicate_rank", "stage_needs",
 ]

@@ -1,0 +1,439 @@
+"""Streaming ingest-time indexing (DESIGN.md §14; ROADMAP top item).
+
+Today's engines scan a COLD resident corpus: every row enters untouched
+and all filtering happens at query time. This module adds the
+production shape for continuous camera streams (NoScope's difference
+detectors + Focus's ingest-time approximate candidate index, PAPERS.md):
+as frames arrive, an ``IngestPipeline`` consumes them chunk-by-chunk and
+runs two cheap passes whose output — a ``CandidateIndex`` — the query
+planner consults as a metadata-like pre-filter, so most queries are
+answered from the index instead of a scan:
+
+* a **temporal-difference skip detector**: consecutive frames whose
+  downsampled grayscale signatures differ by less than a threshold are
+  near-duplicates; each is ALIASED to the last distinct (reference)
+  frame and never scored at ingest. Aliased rows inherit the
+  reference's candidates and decided labels in 'approx' mode; the
+  exactness escape hatch ('exact' mode) never trusts an alias — aliased
+  rows are re-verified by the query-time cascade like any cold row;
+* an **ingest-time candidate-concept index**: each reference frame runs
+  ONE cheap stage-0 cascade rung per planned concept, fused with the
+  pyramid via ``core/executor.make_fused_ingest(emit_scores=True)`` (the
+  anchor concept's rung also emits the pooled levels the other concepts'
+  stage-0 heads read, so the chunk's pyramid is materialized once). The
+  scores yield two artifacts with DIFFERENT exactness grades:
+
+  - **exact decided labels**: where stage-0 is confident
+    (s0 <= p_low or s0 >= p_high, the cascade's own thresholds), the
+    query-time cascade would terminate at stage 0 with the SAME label —
+    per-row independence at fixed static shapes makes the ingest score
+    bit-identical to the query-time one — so these labels are recorded
+    in a ``VirtualColumnStore`` keyed by the cascade and can seed any
+    engine/service store verbatim, in both modes;
+  - **approximate candidates**: per frame, the concepts whose stage-0
+    score clears a recall-knob threshold (p_low shifted by
+    ``prune_margin`` toward the undecided band), optionally capped to
+    the ``top_k`` best margins (Focus's top-K). A query predicate whose
+    concept is NOT in a row's candidate set skips that row's cascade
+    entirely — 'approx' mode only, with ``measured_recall`` reporting
+    what the knob costs on labeled data.
+
+Query integration: ``plan_query(..., index=...)`` attaches the index to
+the ``PhysicalPlan``; ``PhysicalPlan.index_prefilter`` computes the
+index-pruned survivor set and both scan engines accept it via
+``execute(..., survivors=)``. ``indexed_execute`` below bundles the
+seed-store + prefilter + execute sequence. The async service seeds its
+store the same way (``AsyncCascadeService(ingest_index=...)``), so
+indexed rows are answered at submit with zero model invocations.
+
+Exactness contract (differential-tested in tests/test_ingest.py): in
+'exact' mode the indexed row set is bit-identical to a cold
+``ScanEngine``/``naive_scan`` for any shard count and skip-detector
+setting — only exact decided labels are seeded (identical to what the
+cascade computes) and only exact decided-0 rows are pruned (rows the
+seeded engine would reject from cache anyway). 'approx' mode trades
+bounded recall for skipping aliased and non-candidate rows entirely.
+
+The index must be built from the SAME physical cascades the plan
+selects (labels are keyed by ``CompiledCascade.key``); plan first, then
+ingest with ``plan.cascades`` — or keep standing per-concept cascades
+for both. A mismatched cascade simply contributes no seeds/pruning for
+its concept in exact mode (candidates still prune in approx mode, as an
+uncalibrated recall knob).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.executor import make_fused_ingest
+from repro.core.transforms import color_transform
+from repro.engine.scan import CompiledCascade, VirtualColumnStore
+
+
+# ------------------------------------------------------ skip detector ----
+def frame_signature(frames: np.ndarray, res: int = 8) -> np.ndarray:
+    """Downsampled grayscale detector signature (B, res, res): channel
+    mean then box-mean pooling — pure host numpy, a few hundred bytes
+    per frame, the cheap difference feature NoScope's detectors use."""
+    frames = np.asarray(frames, np.float32)
+    b, hw = frames.shape[0], frames.shape[1]
+    res = min(res, hw)
+    k = hw // res
+    gray = frames[:, : res * k, : res * k].mean(axis=3)
+    return gray.reshape(b, res, k, res, k).mean(axis=(2, 4))
+
+
+@dataclass
+class IngestStats:
+    frames: int = 0            # frames consumed
+    chunks: int = 0            # fused scoring dispatches issued
+    refs: int = 0              # distinct (reference) frames scored
+    skipped: int = 0           # near-duplicate frames aliased, not scored
+    decided_labels: int = 0    # exact stage-0 decisions recorded
+    stage0_scores: int = 0     # stage-0 scores computed (refs x concepts)
+
+
+class CandidateIndex:
+    """The ingest pipeline's output: per-row skip-aliases, per-concept
+    candidate masks, and a ``VirtualColumnStore`` of exact stage-0
+    decided labels (see module docstring for the exactness grades).
+    Row-indexed against one corpus; ``save``/``load`` persist it as an
+    npz with the same corpus-token guard as the store."""
+
+    def __init__(self, n_rows: int, cascades: Sequence[CompiledCascade],
+                 *, top_k: int | None = None, prune_margin: float = 0.25):
+        self.n_rows = int(n_rows)
+        self.concepts = [c.concept for c in cascades]
+        self.cascade_keys = {c.concept: c.key for c in cascades}
+        self.top_k = top_k
+        self.prune_margin = float(prune_margin)
+        self.alias = np.arange(self.n_rows, dtype=np.int64)
+        self.indexed = np.zeros(self.n_rows, bool)
+        self.candidates = {c: np.zeros(self.n_rows, bool)
+                           for c in self.concepts}
+        self.scores = {c: np.full(self.n_rows, np.nan, np.float32)
+                       for c in self.concepts}
+        self.decided = VirtualColumnStore(self.n_rows)
+
+    # ------------------------------------------------------- queries ----
+    def survivors(self, ids: np.ndarray,
+                  cascades: Sequence[CompiledCascade], *,
+                  exact: bool = True) -> np.ndarray:
+        """The metadata-like pre-filter: of ``ids``, the rows a scan for
+        the AND of ``cascades`` must still consider. Always drops rows
+        with an exact own-pixel decided-0 label (the seeded engine would
+        reject them from cache — pruning them is a pure work skip, row
+        sets unchanged). 'approx' additionally drops rows whose
+        skip-alias reference is decided 0 or whose alias-resolved
+        candidate set excludes a planned concept (unless decided 1)."""
+        ids = np.asarray(ids, np.int64)
+        keep = np.ones(len(ids), bool)
+        ref = self.alias[ids]
+        idx = self.indexed[ids]
+        for casc in cascades:
+            col = self.decided.column(casc.key)
+            keep &= col[ids] != 0
+            if exact:
+                continue
+            ali = col[ref]
+            keep &= ~(idx & (ali == 0))
+            cand = self.candidates.get(casc.concept)
+            if cand is not None:
+                keep &= ~(idx & ~cand[ref] & (ali != 1))
+        return ids[keep]
+
+    def seed_store(self, store: VirtualColumnStore, *,
+                   exact: bool = True) -> int:
+        """Seed an engine/service ``VirtualColumnStore`` from ingest-time
+        decisions with merge semantics (a computed label is never
+        overwritten). Exact mode copies only own-pixel decided labels —
+        bit-identical to what the query-time cascade computes. Approx
+        mode additionally propagates a reference frame's labels to its
+        skip-aliases (the NoScope approximation). Returns labels
+        seeded."""
+        n = 0
+        for key in self.decided.keys():
+            src = self.decided.column(key)
+            dst = store.column(key)
+            lab = src if exact else np.where(self.indexed,
+                                             src[self.alias], src)
+            fill = (dst < 0) & (lab >= 0)
+            dst[fill] = lab[fill]
+            n += int(fill.sum())
+        return n
+
+    def measured_recall(self, concept: str, truth: np.ndarray,
+                        ids: np.ndarray | None = None) -> float:
+        """The recall knob's measured cost on labeled rows: of the
+        indexed rows whose ground-truth ``concept`` label is 1, the
+        fraction the 'approx' pre-filter keeps (candidate, decided 1,
+        or alias thereof). 1.0 means pruning loses nothing on this
+        data."""
+        ids = (np.arange(self.n_rows, dtype=np.int64) if ids is None
+               else np.asarray(ids, np.int64))
+        ids = ids[self.indexed[ids]]
+        truth = np.asarray(truth)
+        pos = ids[truth[ids] == 1]
+        if not len(pos):
+            return 1.0
+        ref = self.alias[pos]
+        col = self.decided.column(self.cascade_keys[concept])
+        kept = (self.candidates[concept][ref] | (col[ref] == 1)) \
+            & (col[ref] != 0) & (col[pos] != 0)
+        return float(kept.mean())
+
+    def describe(self, cascades: Sequence[CompiledCascade], *,
+                 exact: bool = True) -> str:
+        """One EXPLAIN line (PhysicalPlan.explain renders it)."""
+        n_idx = int(self.indexed.sum())
+        n_alias = int((self.alias != np.arange(self.n_rows))
+                      [self.indexed].sum())
+        ids = np.arange(self.n_rows, dtype=np.int64)
+        surv = len(self.survivors(ids, cascades, exact=exact))
+        mode = "exact" if exact else (
+            f"approx, top_k={self.top_k}, margin={self.prune_margin:g}")
+        frac = surv / self.n_rows if self.n_rows else 1.0
+        return (f"{n_idx}/{self.n_rows} rows indexed, {n_alias} "
+                f"skip-aliased; prefilter keeps {surv} ({frac:.0%}) "
+                f"[{mode}]")
+
+    # --------------------------------------------------- persistence ----
+    def save(self, path, token: tuple = ()) -> None:
+        """Persist as npz with the corpus-token guard (see
+        VirtualColumnStore.save): an ingest-built index loaded against
+        a different corpus would alias and prune the wrong rows."""
+        data = {"n_rows": np.int64(self.n_rows),
+                "token": np.asarray(token, np.float64),
+                "top_k": np.int64(-1 if self.top_k is None else self.top_k),
+                "prune_margin": np.float64(self.prune_margin),
+                "alias": self.alias, "indexed": self.indexed,
+                "concepts": np.array(self.concepts),
+                "concept_keys": np.array(
+                    [repr(self.cascade_keys[c]) for c in self.concepts]),
+                "dec_keys": np.array([repr(k)
+                                      for k in self.decided.keys()])}
+        for c in self.concepts:
+            data[f"cand_{c}"] = self.candidates[c]
+            data[f"score_{c}"] = self.scores[c]
+        for i, k in enumerate(self.decided.keys()):
+            data[f"dec_{i}"] = self.decided.column(k)
+        np.savez(path, **data)
+
+    @classmethod
+    def load(cls, path, token: tuple = ()) -> "CandidateIndex":
+        import ast
+        with np.load(path, allow_pickle=False) as z:
+            if not np.array_equal(z["token"],
+                                  np.asarray(token, np.float64)):
+                raise ValueError(
+                    "CandidateIndex snapshot was saved for a different "
+                    "corpus — row-indexed aliases/candidates would "
+                    "misattribute rows; refusing to load")
+            out = cls.__new__(cls)
+            out.n_rows = int(z["n_rows"])
+            out.concepts = [str(c) for c in z["concepts"]]
+            out.cascade_keys = {
+                c: ast.literal_eval(str(k))
+                for c, k in zip(out.concepts, z["concept_keys"])}
+            tk = int(z["top_k"])
+            out.top_k = None if tk < 0 else tk
+            out.prune_margin = float(z["prune_margin"])
+            out.alias = z["alias"].astype(np.int64)
+            out.indexed = z["indexed"].astype(bool)
+            out.candidates = {c: z[f"cand_{c}"].astype(bool)
+                              for c in out.concepts}
+            out.scores = {c: z[f"score_{c}"].astype(np.float32)
+                          for c in out.concepts}
+            out.decided = VirtualColumnStore(out.n_rows)
+            for i, k in enumerate(z["dec_keys"]):
+                out.decided._cols[ast.literal_eval(str(k))] = \
+                    z[f"dec_{i}"].astype(np.int8)
+        return out
+
+
+class IngestPipeline:
+    """Streaming chunk-by-chunk frame consumer building a
+    ``CandidateIndex`` (module docstring). Construct with the planned
+    cascades and the corpus capacity, then feed arriving frames with
+    ``ingest(frames, ids)`` (global row ids; chunks split internally)
+    or sweep a resident corpus with ``run(images)``. Stateful across
+    calls: the skip detector chains through the previous call's last
+    frame, so a camera stream can be fed in any batch granularity."""
+
+    def __init__(self, cascades: Sequence[CompiledCascade], n_rows: int,
+                 *, chunk: int = 64, skip: bool = True,
+                 skip_threshold: float = 0.008, skip_res: int = 8,
+                 top_k: int | None = None, prune_margin: float = 0.25,
+                 jit: bool = True, use_kernel: bool | None = None,
+                 int8: bool = False):
+        if not cascades:
+            raise ValueError("need at least one cascade to index")
+        self.cascades = list(cascades)
+        self.chunk = int(chunk)
+        self.skip = bool(skip)
+        self.skip_threshold = float(skip_threshold)
+        self.skip_res = int(skip_res)
+        self.jit = jit
+        self.use_kernel = use_kernel
+        self.int8 = bool(int8)
+        self.index = CandidateIndex(n_rows, cascades, top_k=top_k,
+                                    prune_margin=prune_margin)
+        self.stats = IngestStats()
+        self._prev_sig: np.ndarray | None = None
+        self._prev_ref: int | None = None
+        self._anchor_fn: Callable | None = None
+        self._head_fns: list = []
+
+    # ------------------------------------------------- scoring rungs ----
+    def _build(self, base_hw: int) -> None:
+        """One cheap stage-0 rung per concept, pyramid shared: the
+        ANCHOR concept's rung is a truncated (level-0-only) cascade
+        through core/executor.make_fused_ingest(emit_scores=True) —
+        pyramid + stage-0 one program, the Pallas pyramid+stage-0
+        kernel on TPU — emitting the pooled levels the OTHER concepts'
+        stage-0 heads read, so per scored chunk the pyramid is
+        materialized exactly once."""
+        import jax
+
+        c0 = self.cascades[0]
+        head_res = [c.reps[0].resolution for c in self.cascades[1:]]
+        out_res = tuple(sorted(set(head_res), reverse=True))
+        int8 = (self.int8 and c0.stage0 is not None
+                and c0.stage0.qparams is not None)
+        use_kernel = self.use_kernel if c0.stage0 is not None else False
+        self._anchor_fn = make_fused_ingest(
+            c0.model_fns[:1], [c0.thresholds[0]], c0.reps[:1], [],
+            out_res, stage0=c0.stage0, use_kernel=use_kernel,
+            int8=int8, jit=self.jit, emit_scores=True)
+        self._head_fns = []
+        for c in self.cascades[1:]:
+            def head(level, _fn=c.model_fns[0], _rep=c.reps[0]):
+                return _fn(color_transform(level, _rep.color))
+            self._head_fns.append(jax.jit(head) if self.jit else head)
+
+    def _score_refs(self, frames: np.ndarray) -> np.ndarray:
+        """Stage-0 scores (n_ref, n_concepts) for a batch of reference
+        frames, padded to the static chunk shape."""
+        import jax.numpy as jnp
+
+        nv = len(frames)
+        if self._anchor_fn is None:
+            self._build(frames.shape[1])
+        if nv < self.chunk:
+            pad = np.repeat(frames[-1:], self.chunk - nv, axis=0)
+            frames = np.concatenate([frames, pad])
+        _, levels, s0 = self._anchor_fn(jnp.asarray(frames))
+        cols = [np.asarray(s0)[:nv]]
+        for c, fn in zip(self.cascades[1:], self._head_fns):
+            lvl = levels[c.reps[0].resolution]
+            cols.append(np.asarray(fn(lvl))[:nv])
+        self.stats.chunks += 1
+        self.stats.stage0_scores += nv * len(self.cascades)
+        return np.stack(cols, axis=1)
+
+    # ----------------------------------------------------- streaming ----
+    def ingest(self, frames: np.ndarray, ids: np.ndarray) -> None:
+        """Consume arriving frames (global row ``ids``): detect skips,
+        score reference frames, record candidates + exact decided
+        labels into the index."""
+        frames = np.asarray(frames, np.float32)
+        ids = np.asarray(ids, np.int64)
+        idx = self.index
+        for lo in range(0, len(ids), self.chunk):
+            blk = frames[lo:lo + self.chunk]
+            bids = ids[lo:lo + self.chunk]
+            self.stats.frames += len(bids)
+            idx.indexed[bids] = True
+            sigs = frame_signature(blk, self.skip_res)
+            ref_rows: list[int] = []
+            for i, rid in enumerate(bids):
+                dup = (self.skip and self._prev_sig is not None
+                       and self._prev_ref is not None
+                       and float(np.abs(sigs[i] - self._prev_sig).mean())
+                       <= self.skip_threshold)
+                if dup:
+                    idx.alias[rid] = self._prev_ref
+                    self.stats.skipped += 1
+                else:
+                    idx.alias[rid] = rid
+                    self._prev_ref = int(rid)
+                    ref_rows.append(i)
+                self._prev_sig = sigs[i]
+            if not ref_rows:
+                continue
+            ref_rows = np.asarray(ref_rows, np.int64)
+            rids = bids[ref_rows]
+            scores = self._score_refs(blk[ref_rows])
+            self.stats.refs += len(rids)
+            margins = np.empty_like(scores)
+            for k, casc in enumerate(self.cascades):
+                s0 = scores[:, k]
+                idx.scores[casc.concept][rids] = s0
+                lab, decided, margin = self._grade(casc, s0)
+                if decided.any():
+                    idx.decided.record(casc.key, rids[decided],
+                                       lab[decided])
+                    self.stats.decided_labels += int(decided.sum())
+                margins[:, k] = margin
+            cand = margins > 0.0
+            if idx.top_k is not None and idx.top_k < len(self.cascades):
+                # Focus-style cap: keep only the top_k best margins
+                order = np.argsort(-margins, axis=1, kind="stable")
+                capped = np.zeros_like(cand)
+                np.put_along_axis(capped, order[:, : idx.top_k], True,
+                                  axis=1)
+                cand &= capped
+            for k, casc in enumerate(self.cascades):
+                # decided-1 frames are always candidates; decided-0 never
+                col = idx.decided.column(casc.key)[rids]
+                idx.candidates[casc.concept][rids] = \
+                    (cand[:, k] | (col == 1)) & (col != 0)
+
+    def _grade(self, casc: CompiledCascade, s0: np.ndarray):
+        """(labels, exact-decided mask, candidate margin) for one
+        concept's stage-0 scores. Decisions use the cascade's OWN
+        thresholds — bit-identical to the query-time stage-0 exit. The
+        candidate margin shifts p_low toward the undecided band by
+        ``prune_margin`` (the recall knob): margin <= 0 marks a
+        non-candidate."""
+        lo, hi = casc.thresholds[0]
+        if lo is None:               # single-level cascade: stage 0 final
+            lab = (s0 >= 0.5).astype(np.int8)
+            return lab, np.ones(len(s0), bool), s0 - 0.5
+        decided = (s0 <= lo) | (s0 >= hi)
+        lab = (s0 >= hi).astype(np.int8)
+        tau = lo + self.index.prune_margin * max(0.5 - lo, 0.0)
+        return lab, decided, s0 - tau
+
+    def run(self, images: np.ndarray,
+            ids: np.ndarray | None = None) -> CandidateIndex:
+        """Sweep a resident corpus (or a contiguous stream slice)
+        through ``ingest`` in chunk steps; returns the index."""
+        images = np.asarray(images, np.float32)
+        if ids is None:
+            ids = np.arange(len(images), dtype=np.int64)
+        self.ingest(images, ids)
+        return self.index
+
+
+# ------------------------------------------------------ orchestration ----
+def indexed_execute(engine, plan, *, monitor=None):
+    """Execute a ``PhysicalPlan`` carrying an ingest index against a
+    scan engine (serial or sharded): seed the engine's store from the
+    index (exact-only labels in 'exact' mode, alias-propagated in
+    'approx'), pre-filter the metadata survivors through the index, and
+    scan only what remains. Returns the engine's ScanResult /
+    ShardedScanResult; in 'exact' mode the row set is bit-identical to
+    a cold scan of the same plan."""
+    exact = plan.index_mode == "exact"
+    if plan.index is not None:
+        plan.index.seed_store(engine.store, exact=exact)
+        surv = plan.index_prefilter(
+            np.where(engine.metadata_mask(plan.metadata_eq))[0])
+    else:
+        surv = None
+    return engine.execute(plan.cascades, plan.metadata_eq,
+                          survivors=surv, monitor=monitor)

@@ -101,6 +101,16 @@ class PhysicalPlan:
     #                          materialization (engine/scan
     #                          .level_schedule); 'paper' the §VI
     #                          per-image walk
+    # ingest-time candidate-concept index (engine/ingest.CandidateIndex)
+    # consulted as a metadata-like pre-filter: rows whose candidate set
+    # excludes a planned concept skip that predicate's cascade entirely
+    # (DESIGN.md §14). index_mode 'exact' restricts the pre-filter to
+    # ingest decisions that are bit-identical to the query-time cascade
+    # (own-pixel confident stage-0 labels) — the exactness escape hatch;
+    # 'approx' additionally trusts skip-aliases and candidate pruning at
+    # the index's measured-recall knob.
+    index: object | None = None
+    index_mode: str = "exact"
 
     @property
     def cascades(self) -> list:
@@ -161,6 +171,19 @@ class PhysicalPlan:
                            * min(max(p.cascade.selectivity, 0.0), 1.0))
         return {r: n_rows * survive[s] for r, s in sched.items()}
 
+    def index_prefilter(self, ids: np.ndarray) -> np.ndarray:
+        """The metadata-like ingest-index pre-filter (DESIGN.md §14):
+        of the metadata-surviving ``ids``, the rows a scan must still
+        evaluate. Rows the index already decided 0 for any planned
+        predicate — or, in 'approx' mode, rows whose candidate set
+        excludes a planned concept — are dropped here and their
+        cascades never run. No-op (all ids survive) without an index."""
+        ids = np.asarray(ids, np.int64)
+        if self.index is None:
+            return ids
+        return self.index.survivors(ids, self.cascades,
+                                    exact=self.index_mode == "exact")
+
     def unshared_cost_per_row(self) -> float:
         """The SAME cascades and order priced without representation
         sharing (every predicate pays its standalone cost, in this
@@ -212,6 +235,11 @@ class PhysicalPlan:
             sel = ("" if self.meta_selectivity is None
                    else f"   (est. selectivity {self.meta_selectivity:.2f})")
             lines.append(f"  metadata: {meta}{sel}")
+        if self.index is not None:
+            lines.append("  ingest index: "
+                         + self.index.describe(
+                             self.cascades,
+                             exact=self.index_mode == "exact"))
         survive = 1.0
         for i, p in enumerate(self.predicates, 1):
             c = p.cascade
@@ -413,7 +441,8 @@ def plan_query(systems: Mapping, spec: QuerySpec, *,
                scenario: str = "CAMERA", max_level: int = 3,
                metadata: Mapping[str, np.ndarray] | None = None,
                joint: bool = False, costing: str = "engine",
-               max_combos: int = 20000) -> PhysicalPlan:
+               max_combos: int = 20000, index=None,
+               index_mode: str = "exact") -> PhysicalPlan:
     """systems: concept -> TahomaSystem (core/pipeline.py) holding the
     trained grid + cached evaluated spaces. metadata: the corpus metadata
     columns, if available, to estimate the metadata selectivity shown in
@@ -427,14 +456,24 @@ def plan_query(systems: Mapping, spec: QuerySpec, *,
     full-width DENSE levels (core/costs.decompose_cascade_cost
     dense_levels) — so the optimizer minimizes what the engine actually
     pays; 'paper' keeps the §VI reach-weighted per-image walk (whose
-    totals equal CascadeSpace.time_s). Returns the ordered
+    totals equal CascadeSpace.time_s). ``index`` attaches an ingest-time
+    candidate-concept index (engine/ingest.CandidateIndex) the plan
+    consults as a metadata-like pre-filter (PhysicalPlan.index_prefilter,
+    DESIGN.md §14); ``index_mode`` is 'exact' (only bit-identical ingest
+    decisions prune — the exactness escape hatch, re-verifying
+    skip-aliased rows on query) or 'approx' (skip-aliases + candidate
+    pruning at the index's measured-recall knob). Returns the ordered
     PhysicalPlan."""
+    if index_mode not in ("exact", "approx"):
+        raise ValueError(f"unknown index mode {index_mode!r}")
     if joint and spec.predicates:
         if costing not in ("engine", "paper"):
             raise ValueError(f"unknown costing mode {costing!r}")
-        return _plan_query_joint(systems, spec, scenario=scenario,
+        plan = _plan_query_joint(systems, spec, scenario=scenario,
                                  max_level=max_level, metadata=metadata,
                                  costing=costing, max_combos=max_combos)
+        plan.index, plan.index_mode = index, index_mode
+        return plan
     planned = []
     for clause in spec.predicates:
         system = systems[clause.concept]
@@ -452,7 +491,8 @@ def plan_query(systems: Mapping, spec: QuerySpec, *,
                              [p.cascade.selectivity for p in planned])
     planned = [planned[i] for i in order]
     return PhysicalPlan(scenario, dict(spec.metadata_eq), planned,
-                        _meta_selectivity(spec, metadata))
+                        _meta_selectivity(spec, metadata),
+                        index=index, index_mode=index_mode)
 
 
 def _plan_query_joint(systems: Mapping, spec: QuerySpec, *,
@@ -608,17 +648,26 @@ class OnlineReorderer:
     a drift check fires, so the same drift never re-triggers; ``propose``
     is O(k!) at most (order_predicates_shared) and only runs on drift.
 
-    Caveat — conditional vs marginal selectivity: a stage's flushes
-    only ever contain rows that SURVIVED the predicates ordered before
-    it, so the observed rate estimates P(k | earlier pass), while the
-    planner's estimate is the marginal P(k). The planner's whole cost
-    model already assumes independent predicates (order_predicates'
-    optimality argument needs it), under which the two coincide; for
-    correlated predicates the refined estimates are biased exactly
-    where the static estimates are equally wrong. Re-ordering remains
-    EXACT regardless (row sets cannot change) — only the cost of the
-    chosen order is at stake. ROADMAP lists correlation-aware
-    refinement as headroom.
+    Conditional vs marginal selectivity (the PR 5 caveat, FIXED here):
+    a stage's flushes only ever contain rows that SURVIVED the
+    predicates ordered before it, so the observed rate estimates
+    P(k | earlier pass), while everything downstream — the rank rule,
+    expected_scan_cost, and plan_shards' skew weights via ``refined``
+    — needs the marginal P(k). For correlated predicates the two
+    differ, and adopting the conditional rate as if marginal can flip
+    an ordering the true marginals get right (regression-tested in
+    tests/test_ingest.py). The estimator therefore tracks EXPOSURE AT
+    FIRST POSITION: the engines flag stage-0 observations
+    (``observe(..., marginal=True)``) — stage 0 sees the unfiltered
+    row stream, so its positive rate IS the marginal — and only those
+    observations refine estimates. Later-stage (conditional)
+    observations are accumulated separately for introspection
+    (``conditional``) but never drive re-ordering or skew weights;
+    predicates that have not yet held first position keep the static
+    planner estimate. After a mid-scan re-order a different predicate
+    occupies first position and starts accumulating ITS marginal.
+    Re-ordering remains EXACT regardless (row sets cannot change) —
+    only the cost of the chosen order is at stake.
     """
 
     def __init__(self, cascades: Sequence[CompiledCascade], *,
@@ -634,8 +683,10 @@ class OnlineReorderer:
         # at least one observation: min_rows <= 0 would make observed()
         # trust cascades that never flushed (and KeyError on them)
         self.min_rows = max(1, int(min_rows))
-        self.n: dict = {}
+        self.n: dict = {}          # marginal (first-position) exposure
         self.pos: dict = {}
+        self.n_cond: dict = {}     # conditional (later-stage) exposure
+        self.pos_cond: dict = {}
         self.reorders = 0
 
     @classmethod
@@ -648,16 +699,33 @@ class OnlineReorderer:
                    decomposed=decs if all(d is not None for d in decs)
                    else None, **kw)
 
-    def observe(self, key: tuple, labels) -> None:
-        """Fold one evaluation flush's labels into the observed
-        selectivity of cascade ``key``."""
+    def observe(self, key: tuple, labels, *, marginal: bool = False) -> None:
+        """Fold one evaluation flush's labels into cascade ``key``'s
+        observed selectivity. ``marginal=True`` marks a FIRST-POSITION
+        flush (stage 0 of the pipeline at flush time — the unfiltered
+        stream), the only exposure whose positive rate estimates the
+        marginal P(key); anything else is conditional on the earlier
+        predicates and is kept out of the refinement estimate."""
         labels = np.asarray(labels)
-        self.n[key] = self.n.get(key, 0) + len(labels)
-        self.pos[key] = self.pos.get(key, 0) + int((labels == 1).sum())
+        if marginal:
+            self.n[key] = self.n.get(key, 0) + len(labels)
+            self.pos[key] = self.pos.get(key, 0) + int((labels == 1).sum())
+        else:
+            self.n_cond[key] = self.n_cond.get(key, 0) + len(labels)
+            self.pos_cond[key] = (self.pos_cond.get(key, 0)
+                                  + int((labels == 1).sum()))
 
     def observed(self, key: tuple) -> float | None:
+        """Marginal selectivity measured at first position, or None
+        until ``min_rows`` first-position rows have been seen."""
         n = self.n.get(key, 0)
         return self.pos[key] / n if n >= self.min_rows else None
+
+    def conditional(self, key: tuple) -> float | None:
+        """P(key | earlier predicates pass) from later-stage flushes —
+        introspection only; never drives re-ordering or skew weights."""
+        n = self.n_cond.get(key, 0)
+        return self.pos_cond[key] / n if n >= self.min_rows else None
 
     def refined(self, key: tuple) -> float:
         obs = self.observed(key)

@@ -138,6 +138,42 @@ class VirtualColumnStore:
             fill = (dst < 0) & (src >= 0)
             dst[fill] = src[fill]
 
+    def save(self, path, token: tuple = ()) -> None:
+        """Persist the store as an npz so virtual columns (including
+        ingest-built label indexes, engine/ingest.py) survive restarts.
+        ``token`` is the owning corpus's fingerprint
+        (serve/repcache.corpus_token) — ``load`` refuses a different
+        corpus, the same first-binder-wins contract as
+        RepresentationCache.bind_corpus. Keys round-trip via repr /
+        ast.literal_eval; labels are written verbatim (int8), so a
+        load is bit-identical."""
+        data = {"n_rows": np.int64(self.n_rows),
+                "token": np.asarray(token, np.float64),
+                "keys": np.array([repr(k) for k in self._cols])}
+        for i, col in enumerate(self._cols.values()):
+            data[f"col_{i}"] = col
+        np.savez(path, **data)
+
+    @classmethod
+    def load(cls, path, token: tuple = ()) -> "VirtualColumnStore":
+        """Inverse of ``save``. ``token`` must match the saved corpus
+        fingerprint — labels are keyed by row position, so loading them
+        against a different corpus would serve another corpus's labels
+        permanently (exactly the repcache bind_corpus hazard)."""
+        import ast
+        with np.load(path, allow_pickle=False) as z:
+            if not np.array_equal(z["token"],
+                                  np.asarray(token, np.float64)):
+                raise ValueError(
+                    "VirtualColumnStore snapshot was saved for a "
+                    "different corpus — its row-indexed labels would "
+                    "be misattributed; refusing to load")
+            store = cls(int(z["n_rows"]))
+            for i, key in enumerate(z["keys"]):
+                store._cols[ast.literal_eval(str(key))] = \
+                    z[f"col_{i}"].astype(np.int8)
+        return store
+
     def merge_rows_from(self, other: "VirtualColumnStore", rows) -> None:
         """``merge_from`` restricted to ``rows``: identical union /
         never-overwrite semantics at O(len(rows)) per column instead of
@@ -377,13 +413,21 @@ class ScanEngine:
 
     def execute(self, cascades: Sequence[CompiledCascade],
                 metadata_eq: Mapping | None = None, *,
+                survivors: np.ndarray | None = None,
                 monitor=None) -> ScanResult:
         """SELECT row ids WHERE metadata_eq AND every cascade labels 1,
         evaluating cascades in the given (planner's) order. ``monitor``
         (engine/planner.OnlineReorderer) enables mid-scan predicate
-        re-ordering from observed selectivities."""
+        re-ordering from observed selectivities. ``survivors`` is an
+        index-pruned survivor set (engine/ingest.CandidateIndex via
+        PhysicalPlan.index_prefilter, DESIGN.md §14): only metadata
+        survivors ALSO in ``survivors`` are scanned — rows the ingest
+        index excluded never touch a cascade."""
         mask = self.metadata_mask(metadata_eq)
         ids_all = np.where(mask)[0]
+        if survivors is not None:
+            ids_all = np.intersect1d(ids_all,
+                                     np.asarray(survivors, np.int64))
         if not cascades:
             return ScanResult(ids_all, ScanStats())
         return self.scan_rows(cascades, ids_all, monitor=monitor)
@@ -511,7 +555,10 @@ class ScanEngine:
             st.batches += 1
             store.record(casc.key, ids, labels)
             if monitor is not None:
-                monitor.observe(casc.key, labels)
+                # only a FIRST-POSITION flush sees the unfiltered row
+                # stream, so only it observes the marginal selectivity
+                # (OnlineReorderer.observe; conditional otherwise)
+                monitor.observe(casc.key, labels, marginal=stage == 0)
             keep = labels == 1
             route(stage + 1, ids[keep], {r: v[keep]
                                          for r, v in down.items()})
@@ -592,7 +639,7 @@ class ScanEngine:
                 st.batches += 1
                 store.record(casc0.key, sel[unk], labels[unk])
                 if monitor is not None:
-                    monitor.observe(casc0.key, labels[unk])
+                    monitor.observe(casc0.key, labels[unk], marginal=True)
                 final = np.where(unk, labels, cached0)
                 keep = final == 1
                 route(1, sel[keep], {r: v[keep] for r, v in rows.items()})

@@ -158,8 +158,8 @@ class _ObserveOnly:
     def __init__(self, monitor):
         self._monitor = monitor
 
-    def observe(self, key, labels) -> None:
-        self._monitor.observe(key, labels)
+    def observe(self, key, labels, *, marginal: bool = False) -> None:
+        self._monitor.observe(key, labels, marginal=marginal)
 
     def propose(self, cascades):
         return None
@@ -255,10 +255,15 @@ class ShardedScanEngine:
                 metadata_eq: Mapping | None = None, *,
                 shard_plan: ShardPlan | None = None,
                 parallel: bool = True,
+                survivors: np.ndarray | None = None,
                 monitor: object | None = None) -> ShardedScanResult:
         """SELECT row ids WHERE metadata_eq AND every cascade labels 1,
         sharded. ``shard_plan`` overrides the engine's own planning (it
-        must partition exactly the metadata survivors). ``monitor``
+        must partition exactly the metadata survivors). ``survivors``
+        is an index-pruned survivor set (engine/ingest.CandidateIndex
+        via PhysicalPlan.index_prefilter): only metadata survivors ALSO
+        in it are partitioned and scanned — same semantics as the
+        serial engine's ``execute``. ``monitor``
         (engine/planner.OnlineReorderer) is OBSERVE-ONLY here: every
         evaluation flush feeds it measured labels — so the NEXT
         ``plan_for`` partitions on observed selectivities — but the
@@ -267,6 +272,9 @@ class ShardedScanEngine:
         the cross-shard stage aggregation)."""
         cascades = list(cascades)
         ids_all = np.where(self.metadata_mask(metadata_eq))[0]
+        if survivors is not None:
+            ids_all = np.intersect1d(ids_all,
+                                     np.asarray(survivors, np.int64))
         if shard_plan is None:
             shard_plan = self.plan_for(cascades, ids=ids_all,
                                        monitor=monitor)
@@ -594,7 +602,9 @@ class ShardedScanEngine:
                     st.rows_evaluated += int(unk.sum())
                     st.batches += 1
                     if monitor is not None:
-                        monitor.observe(casc0.key, lab[unk])
+                        # stage-0 slabs see the unfiltered shard stream
+                        monitor.observe(casc0.key, lab[unk],
+                                        marginal=True)
                 use = np.where(known, cached, lab)
                 keep = use == 1
                 route(j, 1, ids[keep], pos[keep],
@@ -663,7 +673,7 @@ class ShardedScanEngine:
                     st.batches += 1
                     count_levels(si, derive[s], nv)
                     if monitor is not None:
-                        monitor.observe(casc.key, lab)
+                        monitor.observe(casc.key, lab, marginal=False)
                     keep = lab == 1
                     down = {r: pend[j][2][r][sl][keep]
                             for r in down_carry}

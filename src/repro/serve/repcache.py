@@ -145,6 +145,41 @@ class RepresentationCache:
         for i, row in enumerate(np.asarray(ids, np.int64)):
             self.put(int(row), resolution, block[i])
 
+    # ------------------------------------------------------- persistence --
+    def save(self, path) -> None:
+        """Persist the cache as an npz: entries in LRU order (oldest
+        first, so a budget-trimmed load evicts the same victims the
+        live cache would), plus the bound corpus token. Entries are
+        deterministic poolings of the corpus, so a reload serves
+        bit-identical levels."""
+        token = () if self._corpus is None else self._corpus
+        data = {"budget_bytes": np.int64(self.budget_bytes),
+                "token": np.asarray(token, np.float64),
+                "keys": np.asarray(list(self._od), np.int64)}
+        for i, arr in enumerate(self._od.values()):
+            data[f"ent_{i}"] = arr
+        np.savez(path, **data)
+
+    @classmethod
+    def load(cls, path, token: tuple | None = None
+             ) -> "RepresentationCache":
+        """Inverse of ``save``; reuses the ``bind_corpus`` contract:
+        pass the attaching corpus's token and a snapshot saved for a
+        different corpus refuses to load (its (row, resolution) keys
+        would serve another corpus's pixels). ``token=None`` skips the
+        check and re-binds lazily on first attach."""
+        with np.load(path, allow_pickle=False) as z:
+            cache = cls(int(z["budget_bytes"]))
+            saved = tuple(float(v) for v in z["token"])
+            if saved:
+                cache._corpus = saved
+                if token is not None:
+                    cache.bind_corpus(tuple(token))
+            for i, (row, res) in enumerate(z["keys"]):
+                cache._od[(int(row), int(res))] = z[f"ent_{i}"]
+                cache.nbytes += z[f"ent_{i}"].nbytes
+        return cache
+
     # ------------------------------------------------------------- stats --
     @property
     def hit_rate(self) -> float:

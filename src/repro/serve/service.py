@@ -208,7 +208,8 @@ class AsyncCascadeService:
                  degrade: DegradeConfig | None = None,
                  batch_timeout_s: float | None = None,
                  request_deadline_s: float | None = None,
-                 dispatch_retries: int = 2, faults=None):
+                 dispatch_retries: int = 2, faults=None,
+                 ingest_index=None, ingest_exact: bool = True):
         from repro.launch.mesh import shard_devices
 
         self.images = np.asarray(images, np.float32)
@@ -264,6 +265,15 @@ class AsyncCascadeService:
         # all a shard's queue will ever look up
         self.store = store if store is not None \
             else VirtualColumnStore(len(self.images))
+        # ingest-time label index (engine/ingest.CandidateIndex):
+        # stage-0 decisions made at ingest seed the corpus-wide store
+        # BEFORE the shard seeds are sliced, so indexed rows are
+        # answered at submit with zero model invocations (store_hits).
+        # ingest_exact=True seeds only own-pixel decided labels
+        # (bit-identical to what the cascade would compute);
+        # False additionally propagates skip-alias labels (approx).
+        if ingest_index is not None:
+            ingest_index.seed_store(self.store, exact=ingest_exact)
         self._row_shard = shard_route(np.arange(len(self.images)),
                                       self.n_shards)
         self._shard_stores = []

@@ -289,7 +289,8 @@ def test_monitor_observed_selectivity_feeds_shard_weights(lazy_setup):
     eng = ShardedScanEngine(imgs, metadata, shards=2, chunk=32)
     ids = np.where(eng.metadata_mask({"cam": 0}))[0]
     mon = OnlineReorderer(cascades, min_rows=1)
-    mon.observe(cascades[0].key, np.zeros(128, np.int64))  # observed sel 0
+    mon.observe(cascades[0].key, np.zeros(128, np.int64),
+                marginal=True)                             # observed sel 0
     w_static = eng.row_weights(cascades, ids)
     w_refined = eng.row_weights(cascades, ids, monitor=mon)
     # refined: nothing survives predicate 0, so only its own cost remains

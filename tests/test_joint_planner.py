@@ -494,12 +494,18 @@ def test_shared_levels_materialized_once_per_chunk(trained, monkeypatch,
 def _drifted_cascades():
     """Toy cascades whose planner estimates are deliberately wrong: the
     plan order (a, b) is optimal under the ESTIMATES but pessimal under
-    the labels actually observed, so a zero-threshold monitor must flip
-    the order mid-scan."""
+    the labels actually observed, so a low-threshold monitor must flip
+    the order mid-scan. Under the corrected (first-position-exposure)
+    estimator only the predicate at stage 0 ever observes its marginal,
+    so the flip must come from a's OBSERVED selectivity (~0.5 on these
+    corpora) overtaking b's ESTIMATE: a is estimated near-perfectly
+    selective (rank ~cost), b moderately (rank cost/0.7) — once a's
+    true ~0.5 is adopted its rank (cost/0.5) exceeds b's and b goes
+    first."""
     a = _toy_cascade("a", 1)
     b = _toy_cascade("b", 2, [(0.25, 0.75), (0.3, 0.7), (None, None)])
     a.cost_s, a.selectivity = 1.0e-3, 0.05     # est: filters everything
-    b.cost_s, b.selectivity = 1.0e-3, 0.95     # est: filters nothing
+    b.cost_s, b.selectivity = 1.0e-3, 0.30     # est: filters moderately
     return [a, b]
 
 
@@ -547,8 +553,9 @@ def test_online_reorderer_unit():
     mon = OnlineReorderer(cascades, drift_threshold=0.1, min_rows=4)
     key_a, key_b = cascades[0].key, cascades[1].key
     assert mon.propose(cascades) is None           # nothing observed
-    mon.observe(key_a, np.ones(8))                 # a survives everything
-    mon.observe(key_b, np.zeros(8))                # b kills everything
+    # first-position (marginal) exposure — the only kind that refines
+    mon.observe(key_a, np.ones(8), marginal=True)  # a survives everything
+    mon.observe(key_b, np.zeros(8), marginal=True)  # b kills everything
     perm = mon.propose(cascades)
     assert perm == [1, 0]                          # b now goes first
     # estimates adopted: the same drift does not re-fire

@@ -1,11 +1,16 @@
 """README quickstart must keep working VERBATIM: the commands are parsed
 out of README.md's Quickstart section and executed exactly as written,
 so editing the README without updating the examples (or vice versa)
-fails CI instead of rotting silently.
+fails CI instead of rotting silently. The headline-results table is
+held to the same standard: every quoted figure is parsed out of its
+row and checked against the committed ``BENCH_*.json`` artifact within
+a pinned tolerance, so the README can't drift from the measurements it
+cites.
 
 The tier-1 verify command in the README is asserted to match
 ROADMAP.md's canonical line rather than executed — running the full
 suite from inside the suite would recurse."""
+import json
 import os
 import re
 import subprocess
@@ -49,6 +54,102 @@ def test_readme_tier1_command_matches_roadmap():
     m = re.search(r"\*\*Tier-1 verify:\*\* `([^`]+)`", roadmap)
     assert m, "ROADMAP.md lost its tier-1 verify line"
     assert m.group(1) in README.read_text()
+
+
+# ------------------------------------------------- headline figures ------
+def _bench(name: str) -> dict:
+    return json.loads((ROOT / name).read_text())
+
+
+def _row(label: str) -> str:
+    """The headline-results table row containing ``label``."""
+    for ln in README.read_text().splitlines():
+        if ln.startswith("|") and label in ln:
+            return ln
+    raise AssertionError(f"README results table lost its {label!r} row")
+
+
+def _fig(row: str, pattern: str) -> float:
+    """First capture group of ``pattern`` in the row, as float."""
+    m = re.search(pattern, row)
+    assert m, f"figure /{pattern}/ not found in row: {row}"
+    return float(m.group(1))
+
+
+def test_readme_figures_query_engine():
+    qe = _bench("BENCH_query_engine.json")
+    row = _row("Multi-predicate query engine")
+    assert qe["speedup_min_x"] >= _fig(row, r">(\d+(?:\.\d+)?)x end")
+    assert qe["all_identical"]
+    row = _row("Joint vs independent")
+    m = re.search(r"(\d+\.\d+)–(\d+\.\d+)x end-to-end", row)
+    assert m, row
+    lo, hi = float(m.group(1)), float(m.group(2))
+    assert lo - 0.05 <= qe["joint_speedup_min_x"] <= hi + 0.05
+    assert qe["joint_all_identical_vs_own_naive"]
+
+
+def test_readme_figures_sharded_and_serving():
+    sh = _bench("BENCH_sharded_scan.json")
+    row = _row("Sharded scan")
+    assert sh["throughput_scaling_x"] == pytest.approx(
+        _fig(row, r"~(\d+(?:\.\d+)?)x row-throughput"), rel=0.15)
+    assert sh["all_identical"]
+    sv = _bench("BENCH_serve.json")
+    row = _row("Async serving")
+    assert sv["speedup_8dev_x"] == pytest.approx(
+        _fig(row, r"(\d+\.\d+)x request throughput"), rel=0.01)
+    assert sv["all_identical"]
+
+
+def test_readme_figures_cascade_eval_and_fused():
+    ce = _bench("BENCH_cascade_eval.json")
+    row = _row("Cascade-space evaluation")
+    assert ce["eval"]["grid_large"]["n_cascades"] == pytest.approx(
+        _fig(row, r"(\d+)M cascades") * 1e6, rel=0.05)
+    assert ce["eval"]["end_to_end_speedup_x"] == pytest.approx(
+        _fig(row, r"(\d+\.\d+)x end-to-end"), rel=0.05)
+    assert ce["eval"]["streaming_large_grid"]["total_s"] == pytest.approx(
+        _fig(row, r"~(\d+)s streaming"), rel=0.15)
+    assert ce["transform"]["speedup"] == pytest.approx(
+        _fig(row, r"(\d+\.\d+)x transform"), rel=0.02)
+    fu = _bench("BENCH_fused_scan.json")
+    row = _row("Fused + lazy hot path")
+    assert fu["hotpath_speedup_x"] == pytest.approx(
+        _fig(row, r"(\d+\.\d+)x per-chunk"), rel=0.01)
+    assert fu["hotpath_stress"]["lazy_level_rows_saved_x"] == \
+        pytest.approx(_fig(row, r"(\d+\.\d+)x fewer level-rows"), rel=0.01)
+    assert fu["all_identical"]
+
+
+def test_readme_figures_overload():
+    ov = _bench("BENCH_overload.json")
+    row = _row("Overload hardening")
+    deg = next(p for p in ov["curves"]["degrade"] if p["load_x"] == 4.0)
+    shed = next(p for p in ov["curves"]["shed"] if p["load_x"] == 4.0)
+    assert 100 * deg["goodput_rps"] / deg["offered_rps"] == \
+        pytest.approx(_fig(row, r"~(\d+)% of offered load"), abs=2.0)
+    assert deg["p99_ms"] == pytest.approx(
+        _fig(row, r"p99 ~(\d+)ms"), rel=0.05)
+    assert 100 * shed["shed_rate"] == pytest.approx(
+        _fig(row, r"sheds (\d+)%"), abs=2.0)
+    assert shed["p99_ms"] == pytest.approx(
+        _fig(row, r"p99 bounded ~(\d+)ms"), rel=0.10)
+    assert ov["subsat_identical"]
+
+
+def test_readme_figures_ingest():
+    ig = _bench("BENCH_ingest.json")
+    row = _row("Ingest-time indexing")
+    assert ig["invocations_eliminated_approx_pct"] == pytest.approx(
+        _fig(row, r"(\d+)% of query-time model invocations"), abs=2.0)
+    assert ig["approx_recall_vs_cold"] == pytest.approx(
+        _fig(row, r"recall (\d+\.\d+)"), abs=0.02)
+    assert ig["invocations_eliminated_exact_pct"] == pytest.approx(
+        _fig(row, r"exact mode still removes (\d+)%"), abs=2.0)
+    assert ig["exact_identical"]
+    # the acceptance floor the PR ships under
+    assert ig["invocations_eliminated_approx_pct"] >= 50.0
 
 
 @pytest.mark.parametrize("cmd", _quickstart_commands(),
