@@ -1,0 +1,215 @@
+"""Relational query algebra benchmark (engine/algebra.py, DESIGN.md
+§15): what do cost-based predicate pushdown, short-circuit child
+ordering, and join window pushdown buy on a boolean expression-tree
+query — and do the rewrites stay exact? Writes ``BENCH_algebra.json``
+at the repo root.
+
+  PYTHONPATH=src python -m benchmarks.bench_algebra [--quick]
+
+Protocol: one TAHOMA system per concept; the tree query
+
+  SELECT frames WHERE cam = 0
+                  AND contains(A) AND (NOT contains(B) OR contains(C))
+
+runs three ways on fresh engines (timings warm, best of ``repeats``):
+
+  optimized     — normalize -> cost-ordered children -> short-circuit
+                  execution (positive-leaf runs share one pyramid,
+                  AND/OR thread survivor sets, NOT reads decided-0
+                  virtual columns);
+  unoptimized   — the SAME tree, user child order, every child
+                  evaluated on its node's full input (no
+                  short-circuiting) — the algebra baseline;
+  naive         — per-concept full scans + per-row mask algebra, no
+                  metadata pushdown (the oracle).
+
+All three row sets must be bit-identical (SystemExit otherwise — the
+CI exactness gate). The join block times the cross-camera temporal
+join with and without window pushdown on a correlated two-camera
+corpus; pair sets must match each other and the nested-loop
+reference."""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+from bench_query_engine import build_systems  # noqa: E402
+
+from repro.data.synthetic import (DEFAULT_PREDICATES,  # noqa: E402
+                                  make_multi_corpus,
+                                  make_two_camera_corpus)
+from repro.engine import (And, Join, Not, Or, Pred, QuerySpec,  # noqa: E402
+                          ScanEngine, execute_join, execute_tree,
+                          naive_join_pairs, naive_tree_rows, plan_query)
+
+ROOT = Path(__file__).resolve().parents[1]
+OUT = ROOT / "BENCH_algebra.json"
+QUICK_DIR = ROOT / "artifacts" / "bench"
+
+
+def _best(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_tree(systems, names, n_query: int, *, chunk: int,
+               repeats: int, log=print) -> dict:
+    a, b, c = names
+    where = And(Pred(a), Or(Not(Pred(b)), Pred(c)))
+    specs = [s for s in DEFAULT_PREDICATES if s.name in names]
+    qx, _ = make_multi_corpus(specs, n_query, hw=32, seed=7,
+                              positive_rate=0.4)
+    metadata = {"cam": np.arange(n_query) % 2}
+    spec_q = QuerySpec(metadata_eq={"cam": 0}, where=where)
+    plan = plan_query(systems, spec_q, scenario="CAMERA",
+                      metadata=metadata)
+    plan_un = plan_query(systems, QuerySpec(metadata_eq={"cam": 0},
+                                            where=where),
+                         scenario="CAMERA", metadata=metadata)
+    log(plan.explain(n_rows=n_query))
+
+    def run(p, opt):
+        eng = ScanEngine(qx, metadata, chunk=chunk)
+        return execute_tree(eng, p, optimize=opt)
+
+    res_opt = run(plan, True)                         # warm the jit
+    res_un = run(plan_un, False)
+    t_opt = _best(lambda: run(plan, True), repeats)
+    t_un = _best(lambda: run(plan_un, False), repeats)
+    t0 = time.perf_counter()
+    ref = naive_tree_rows(qx, where, plan.cascade_map(), metadata,
+                          plan.metadata_eq, chunk=chunk)
+    t_naive = time.perf_counter() - t0
+
+    if not (np.array_equal(res_opt.indices, ref)
+            and np.array_equal(res_un.indices, ref)):
+        raise SystemExit(
+            "[bench] EXACTNESS GATE FAILED: optimized / unoptimized "
+            "tree row sets diverged from the per-row naive oracle")
+    log(f"[bench] tree: optimized {t_opt:.2f}s "
+        f"({res_opt.rows_evaluated} rows evaluated) | unoptimized "
+        f"{t_un:.2f}s ({res_un.rows_evaluated}) | naive {t_naive:.2f}s "
+        f"| {len(ref)} rows, identical: True")
+    return {
+        "query": f"cam=0 AND contains({a}) AND "
+                 f"(NOT contains({b}) OR contains({c}))",
+        "rows": int(n_query),
+        "matches": int(len(ref)),
+        "est_cost_per_row_us": round(
+            plan.estimated_cost_per_row() * 1e6, 1),
+        "optimized_s": round(t_opt, 4),
+        "unoptimized_s": round(t_un, 4),
+        "naive_s": round(t_naive, 4),
+        "rows_evaluated_optimized": int(res_opt.rows_evaluated),
+        "rows_evaluated_unoptimized": int(res_un.rows_evaluated),
+        "engine_calls_optimized": int(res_opt.engine_calls),
+        "engine_calls_unoptimized": int(res_un.engine_calls),
+        "speedup_vs_unoptimized_x": round(t_un / t_opt, 2),
+        "speedup_vs_naive_x": round(t_naive / t_opt, 2),
+        "rows_identical": True,
+    }
+
+
+def bench_join(systems, names, n_each: int, *, chunk: int, delta: float,
+               repeats: int, log=print) -> dict:
+    specs = [s for s in DEFAULT_PREDICATES if s.name in names]
+    (xa, _, ta), (xb, _, tb) = make_two_camera_corpus(
+        specs, n_each, hw=32, seed=11, corr=0.6, dt_max=int(delta))
+    meta_a, meta_b = {"t": ta}, {"t": tb}
+    tree = Join(Pred(names[0]),
+                And(Pred(names[0]), Pred(names[1])), delta_t=delta)
+    plan = plan_query(systems, QuerySpec(where=tree), scenario="CAMERA",
+                      metadata=(meta_a, meta_b))
+    log(plan.explain(n_rows=(n_each, n_each)))
+
+    def run(opt):
+        engines = (ScanEngine(xa, meta_a, chunk=chunk),
+                   ScanEngine(xb, meta_b, chunk=chunk))
+        return execute_join(engines, plan, optimize=opt)
+
+    res = run(True)                                   # warm the jit
+    kept = plan.window_kept          # before run(False) resets it
+    res_un = run(False)
+    t_push = _best(lambda: run(True), repeats)
+    t_full = _best(lambda: run(False), repeats)
+    ref = naive_join_pairs((res_un.left.indices, ta),
+                           (res_un.right.indices, tb), delta)
+    if not (np.array_equal(res.pairs, ref)
+            and np.array_equal(res_un.pairs, ref)):
+        raise SystemExit(
+            "[bench] EXACTNESS GATE FAILED: join pair sets diverged "
+            "from the nested-loop reference")
+    log(f"[bench] join: pushdown {t_push:.2f}s (probe pruned to "
+        f"{kept}/{n_each}) | full {t_full:.2f}s | {len(ref)} pairs, "
+        f"identical: True")
+    return {
+        "query": f"contains({names[0]})@camA JOIN "
+                 f"(contains({names[0]}) AND contains({names[1]}))@camB "
+                 f"ON |t_A - t_B| <= {delta:g}",
+        "rows_per_side": int(n_each),
+        "pairs": int(len(ref)),
+        "build_side": ["left", "right"][plan.build_side],
+        "window_kept_rows": int(kept),
+        "window_kept_frac": round(kept / n_each, 3),
+        "pushdown_s": round(t_push, 4),
+        "full_s": round(t_full, 4),
+        "speedup_pushdown_x": round(t_full / t_push, 2),
+        "pairs_identical": True,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller corpus/training (CI smoke); writes "
+                         "under artifacts/bench/, never the headline")
+    ap.add_argument("--chunk", type=int, default=64)
+    ap.add_argument("--delta", type=float, default=2.0)
+    args = ap.parse_args()
+
+    import jax
+    specs = DEFAULT_PREDICATES[:3]
+    names = [s.name for s in specs]
+    systems = build_systems(specs, steps=30 if args.quick else 60,
+                            n_train=160 if args.quick else 240, hw=32)
+    n_query = 384 if args.quick else 1024
+    n_each = 192 if args.quick else 512
+    repeats = 2 if args.quick else 3
+
+    report = {
+        "backend": jax.default_backend(),
+        "metric": "same expression tree, three executions (cost-ordered "
+                  "short-circuit vs full-evaluation vs naive per-row "
+                  "oracle) — row/pair sets must be bit-identical",
+        "tree": bench_tree(systems, names, n_query, chunk=args.chunk,
+                           repeats=repeats),
+        "join": bench_join(systems, names[:2], n_each, chunk=args.chunk,
+                           delta=args.delta, repeats=repeats),
+    }
+    if args.quick:
+        QUICK_DIR.mkdir(parents=True, exist_ok=True)
+        out = QUICK_DIR / OUT.with_suffix(".quick.json").name
+    else:
+        out = OUT
+    out.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"wrote {out}  (tree: "
+          f"{report['tree']['speedup_vs_unoptimized_x']}x vs "
+          f"unoptimized, {report['tree']['speedup_vs_naive_x']}x vs "
+          f"naive; join pushdown: "
+          f"{report['join']['speedup_pushdown_x']}x)")
+
+
+if __name__ == "__main__":
+    main()

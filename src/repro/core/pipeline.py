@@ -381,7 +381,9 @@ def build_cascade_service(images, cascades, *, mode: str = "async",
 
 
 def build_ingest_pipeline(cascades, n_rows: int, *, chunk: int = 64,
-                          skip: bool = True, skip_threshold: float = 0.008,
+                          skip: bool = True,
+                          skip_threshold: float | None = 0.008,
+                          calib_frames: int = 48,
                           top_k: int | None = None,
                           prune_margin: float = 0.25, jit: bool = True,
                           int8: bool = False,
@@ -396,12 +398,15 @@ def build_ingest_pipeline(cascades, n_rows: int, *, chunk: int = 64,
     ``plan_query(..., index=...)`` and ``build_cascade_service(...,
     ingest_index=...)``. The cascades must be the SAME physical
     cascades queries will select — labels are keyed by
-    CompiledCascade.key."""
+    CompiledCascade.key. ``skip_threshold=None`` auto-calibrates the
+    temporal-difference threshold per camera from the first
+    ``calib_frames`` frames (IngestPipeline.calibrate_threshold)."""
     from repro.engine.ingest import IngestPipeline
 
     if isinstance(cascades, dict):
         cascades = list(cascades.values())
     return IngestPipeline(cascades, n_rows, chunk=chunk, skip=skip,
-                          skip_threshold=skip_threshold, top_k=top_k,
+                          skip_threshold=skip_threshold,
+                          calib_frames=calib_frames, top_k=top_k,
                           prune_margin=prune_margin, jit=jit, int8=int8,
                           use_kernel=use_kernel)

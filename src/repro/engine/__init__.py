@@ -1,6 +1,13 @@
-"""Query engine (DESIGN.md §4, §11): logical→physical planner (joint or
-independent cascade selection) + unified multi-predicate scan executor
-over physically-optimized cascades."""
+"""Query engine (DESIGN.md §4, §11, §15): logical→physical planner
+(joint or independent cascade selection), boolean expression-tree
+algebra with cross-corpus temporal joins, + unified multi-predicate
+scan executor over physically-optimized cascades."""
+from repro.engine.algebra import (AlgebraResult, And, Join, JoinPlan,
+                                  JoinResult, Not, Or, PlanNode, Pred,
+                                  TreePlan, execute_join, execute_tree,
+                                  naive_join_pairs, naive_tree_rows,
+                                  normalize, order_children,
+                                  plan_expression, temporal_hash_join)
 from repro.engine.ingest import (CandidateIndex, IngestPipeline,
                                  frame_signature, indexed_execute)
 from repro.engine.planner import (OnlineReorderer, PhysicalPlan,
@@ -16,13 +23,16 @@ from repro.engine.sharded import (ShardedScanEngine, ShardedScanResult,
                                   ShardedScanStats)
 
 __all__ = [
-    "CandidateIndex", "CompiledCascade", "IngestPipeline",
-    "OnlineReorderer", "PhysicalPlan",
-    "PlannedPredicate", "PredicateClause", "QuerySpec", "ScanEngine",
-    "ScanResult", "ScanStats", "ShardedScanEngine", "ShardedScanResult",
-    "ShardedScanStats", "VirtualColumnStore", "expected_scan_cost",
-    "frame_signature", "indexed_execute", "joint_scan_cost",
-    "make_batch_runner", "naive_scan",
-    "order_predicates", "order_predicates_shared", "plan_query",
-    "predicate_rank", "stage_needs",
+    "AlgebraResult", "And", "CandidateIndex", "CompiledCascade",
+    "IngestPipeline", "Join", "JoinPlan", "JoinResult", "Not",
+    "OnlineReorderer", "Or", "PhysicalPlan", "PlanNode",
+    "PlannedPredicate", "Pred", "PredicateClause", "QuerySpec",
+    "ScanEngine", "ScanResult", "ScanStats", "ShardedScanEngine",
+    "ShardedScanResult", "ShardedScanStats", "TreePlan",
+    "VirtualColumnStore", "execute_join", "execute_tree",
+    "expected_scan_cost", "frame_signature", "indexed_execute",
+    "joint_scan_cost", "make_batch_runner", "naive_join_pairs",
+    "naive_scan", "naive_tree_rows", "normalize", "order_children",
+    "order_predicates", "order_predicates_shared", "plan_expression",
+    "plan_query", "predicate_rank", "stage_needs", "temporal_hash_join",
 ]

@@ -145,6 +145,37 @@ class CandidateIndex:
                 keep &= ~(idx & ~cand[ref] & (ali != 1))
         return ids[keep]
 
+    def planning_stats(self, key: tuple, base_sel: float, *,
+                       prefilter: bool = True) -> tuple[float, float]:
+        """Index-conditioned planning statistics for ONE cascade
+        (DESIGN.md §14.5): ``(eval_frac, selectivity)`` where
+        ``eval_frac`` is the fraction of candidate rows whose label the
+        seeded store does NOT already hold (rows a scan must still
+        evaluate — the rest are cache hits), and ``selectivity`` is
+        P(label == 1) over the rows the scan will consider, combining
+        the index's exact decided counts with ``base_sel`` (the eval-
+        split estimate) on the undecided remainder. ``prefilter=True``
+        conditions both on the exact-mode survivor set (decided-0 rows
+        pruned up front — the conjunctive planner's path);
+        ``prefilter=False`` keeps every row in the denominator (the
+        algebra executor only SEEDS the store: pruning decided-0 rows
+        is unsound under OR/NOT). A ``key`` the index never built
+        returns ``(1.0, base_sel)`` unchanged. Per-cascade
+        conditioning only — cross-concept prefilter correlation is
+        deliberately ignored (each pool entry is priced against its own
+        column)."""
+        if self.n_rows == 0 or key not in set(self.decided.keys()):
+            return 1.0, float(base_sel)
+        col = self.decided.column(key)
+        n0 = int((col == 0).sum())
+        n1 = int((col == 1).sum())
+        und = self.n_rows - n0 - n1
+        denom = (self.n_rows - n0) if prefilter else self.n_rows
+        if denom <= 0:
+            return 0.0, 0.0
+        sel = (n1 + und * float(base_sel)) / denom
+        return und / denom, float(min(max(sel, 0.0), 1.0))
+
     def seed_store(self, store: VirtualColumnStore, *,
                    exact: bool = True) -> int:
         """Seed an engine/service ``VirtualColumnStore`` from ingest-time
@@ -265,7 +296,8 @@ class IngestPipeline:
 
     def __init__(self, cascades: Sequence[CompiledCascade], n_rows: int,
                  *, chunk: int = 64, skip: bool = True,
-                 skip_threshold: float = 0.008, skip_res: int = 8,
+                 skip_threshold: float | None = 0.008, skip_res: int = 8,
+                 calib_frames: int = 48,
                  top_k: int | None = None, prune_margin: float = 0.25,
                  jit: bool = True, use_kernel: bool | None = None,
                  int8: bool = False):
@@ -274,7 +306,15 @@ class IngestPipeline:
         self.cascades = list(cascades)
         self.chunk = int(chunk)
         self.skip = bool(skip)
-        self.skip_threshold = float(skip_threshold)
+        # skip_threshold=None LEARNS the per-camera threshold from the
+        # first ``calib_frames`` consecutive-frame signature diffs (the
+        # warmup window) instead of trusting the pinned default; no
+        # frame is skipped until calibration completes, so warmup is
+        # conservative (every frame a scored reference), never lossy.
+        self.skip_threshold = (None if skip_threshold is None
+                               else float(skip_threshold))
+        self.calib_frames = int(calib_frames)
+        self._calib_diffs: list[float] = []
         self.skip_res = int(skip_res)
         self.jit = jit
         self.use_kernel = use_kernel
@@ -350,10 +390,17 @@ class IngestPipeline:
             sigs = frame_signature(blk, self.skip_res)
             ref_rows: list[int] = []
             for i, rid in enumerate(bids):
-                dup = (self.skip and self._prev_sig is not None
+                diff = (float(np.abs(sigs[i] - self._prev_sig).mean())
+                        if self._prev_sig is not None else None)
+                if diff is not None and self.skip_threshold is None:
+                    self._calib_diffs.append(diff)
+                    if len(self._calib_diffs) >= self.calib_frames:
+                        self.skip_threshold = self.calibrate_threshold(
+                            self._calib_diffs)
+                dup = (self.skip and diff is not None
                        and self._prev_ref is not None
-                       and float(np.abs(sigs[i] - self._prev_sig).mean())
-                       <= self.skip_threshold)
+                       and self.skip_threshold is not None
+                       and diff <= self.skip_threshold)
                 if dup:
                     idx.alias[rid] = self._prev_ref
                     self.stats.skipped += 1
@@ -391,6 +438,30 @@ class IngestPipeline:
                 col = idx.decided.column(casc.key)[rids]
                 idx.candidates[casc.concept][rids] = \
                     (cand[:, k] | (col == 1)) & (col != 0)
+
+    @staticmethod
+    def calibrate_threshold(diffs, *, min_ratio: float = 4.0,
+                            fallback: float = 0.008) -> float:
+        """Per-camera skip threshold from a warmup window of
+        consecutive-frame signature diffs (NoScope-style difference-
+        detector calibration). On a real stream the diffs are bimodal:
+        within-scene sensor jitter sits orders of magnitude below
+        scene-change diffs. Sort the diffs and split at the largest
+        MULTIPLICATIVE gap between neighbors; the threshold is the
+        geometric mean of the gap's endpoints — maximum margin toward
+        both clusters, so the margin property the pinned default is
+        tested for (tests/test_ingest.py) holds by construction
+        whenever the gap ratio exceeds ``min_ratio``². Falls back to
+        the pinned default on too few samples or no clear gap (static
+        camera: nothing but jitter in the window)."""
+        d = np.sort(np.asarray([x for x in diffs if x > 0.0], np.float64))
+        if len(d) < 8:
+            return float(fallback)
+        ratios = d[1:] / d[:-1]
+        k = int(np.argmax(ratios))
+        if ratios[k] < min_ratio:
+            return float(fallback)
+        return float(np.sqrt(d[k] * d[k + 1]))
 
     def _grade(self, casc: CompiledCascade, s0: np.ndarray):
         """(labels, exact-decided mask, candidate margin) for one

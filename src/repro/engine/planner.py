@@ -69,9 +69,16 @@ class PredicateClause:
 
 @dataclass
 class QuerySpec:
-    """SELECT frames WHERE metadata_eq AND contains(c1) AND ... ."""
+    """SELECT frames WHERE metadata_eq AND contains(c1) AND ... .
+
+    ``where`` generalizes the conjunctive ``predicates`` list to a full
+    boolean expression tree (engine/algebra: And/Or/Not/Pred, or a
+    root Join; DESIGN.md §15). When set, ``plan_query`` compiles it via
+    the tree algebra instead and returns a TreePlan/JoinPlan —
+    ``predicates`` must then be empty."""
     metadata_eq: dict = field(default_factory=dict)
     predicates: list = field(default_factory=list)   # [PredicateClause]
+    where: object | None = None                      # algebra expression
 
 
 @dataclass
@@ -466,12 +473,29 @@ def plan_query(systems: Mapping, spec: QuerySpec, *,
     PhysicalPlan."""
     if index_mode not in ("exact", "approx"):
         raise ValueError(f"unknown index mode {index_mode!r}")
+    if getattr(spec, "where", None) is not None:
+        # boolean expression tree / cross-corpus join: compile through
+        # the tree algebra (engine/algebra, DESIGN.md §15). The index
+        # conditions leaf costing and seeds stores (exact labels only —
+        # decided-0 pruning is unsound under OR/NOT, so 'approx'
+        # prefiltering does not apply to trees).
+        from repro.engine.algebra import plan_expression
+        if spec.predicates:
+            raise ValueError("QuerySpec.where and QuerySpec.predicates "
+                             "are mutually exclusive")
+        if index is not None and index_mode != "exact":
+            raise ValueError("expression trees support index_mode="
+                             "'exact' only (seeding, no pruning)")
+        return plan_expression(systems, spec.where, scenario=scenario,
+                               max_level=max_level, metadata=metadata,
+                               metadata_eq=spec.metadata_eq, index=index)
     if joint and spec.predicates:
         if costing not in ("engine", "paper"):
             raise ValueError(f"unknown costing mode {costing!r}")
         plan = _plan_query_joint(systems, spec, scenario=scenario,
                                  max_level=max_level, metadata=metadata,
-                                 costing=costing, max_combos=max_combos)
+                                 costing=costing, max_combos=max_combos,
+                                 index=index)
         plan.index, plan.index_mode = index, index_mode
         return plan
     planned = []
@@ -497,7 +521,8 @@ def plan_query(systems: Mapping, spec: QuerySpec, *,
 
 def _plan_query_joint(systems: Mapping, spec: QuerySpec, *,
                       scenario: str, max_level: int, metadata,
-                      costing: str, max_combos: int) -> PhysicalPlan:
+                      costing: str, max_combos: int,
+                      index=None) -> PhysicalPlan:
     """Joint cascade-set selection (DESIGN.md §11.2). Candidate pools =
     per-predicate constrained Pareto frontiers; each candidate carries
     (Selection, DecomposedCost, selectivity). The search prices every
@@ -509,7 +534,17 @@ def _plan_query_joint(systems: Mapping, spec: QuerySpec, *,
     (tests/test_joint_planner.py). A clause WITHOUT an explicit
     min_accuracy keeps the independent rule's promise (most accurate
     qualifying cascade): its pool is just the independent pick, and only
-    ordering + shared-level pricing remain to optimize for it."""
+    ordering + shared-level pricing remain to optimize for it.
+
+    ``index`` (engine/ingest.CandidateIndex, DESIGN.md §14.5) makes the
+    search cost candidates against INDEX-REDUCED cardinality instead of
+    the full corpus: a candidate whose cascade key the index holds
+    decided labels for is priced at its undecided-row fraction
+    (DecomposedCost.scaled — rows the seeded store answers cost
+    nothing) with its selectivity conditioned on the exact-mode
+    prefilter survivors (CandidateIndex.planning_stats). Candidates the
+    index never scored keep full-corpus pricing, so the never-worse
+    guarantee is preserved within the indexed costing."""
     clauses = spec.predicates
     spaces, pools, ind_pos = [], [], []
     for clause in clauses:
@@ -534,6 +569,16 @@ def _plan_query_joint(systems: Mapping, spec: QuerySpec, *,
                                          dense_levels=costing == "engine")
             frac = estimate_selectivity(space, s.index, system.eval_scores,
                                         system.p_low, system.p_high)
+            if index is not None:
+                # candidate-index-aware costing: price this candidate
+                # against the rows the index leaves for it (its cascade
+                # key, computed without compiling)
+                key = (clause.concept, (int(space.kind[s.index]),
+                                        int(space.i1[s.index]),
+                                        int(space.i2[s.index])))
+                eval_frac, frac = index.planning_stats(key, frac,
+                                                       prefilter=True)
+                dec = dec.scaled(eval_frac)
             entries.append((s, dec, frac))
         spaces.append(space)
         pools.append(entries)

@@ -113,6 +113,15 @@ class VirtualColumnStore:
     def known_rows(self, key: tuple) -> int:
         return int((self.column(key) >= 0).sum())
 
+    def rows_with_label(self, key: tuple, ids: np.ndarray,
+                        label: int) -> np.ndarray:
+        """Of ``ids``, the rows whose stored label equals ``label``.
+        The algebra executor's NOT path (engine/algebra.py, DESIGN.md
+        §15): after a scan has decided every candidate row, the
+        decided-0 rows of a cascade's int8 column are exactly ¬Pred."""
+        ids = np.asarray(ids, np.int64)
+        return ids[self.column(key)[ids] == label]
+
     def keys(self) -> list[tuple]:
         return list(self._cols)
 

@@ -199,6 +199,13 @@ class ShardedScanEngine:
         return self.local.images
 
     @property
+    def metadata(self) -> Mapping[str, np.ndarray]:
+        """The corpus metadata columns (the algebra layer's temporal
+        join reads its timestamp column engine-agnostically —
+        engine/algebra.execute_join)."""
+        return self.local.metadata
+
+    @property
     def store(self) -> VirtualColumnStore:
         """The corpus-wide merged store (shared with the wrapped serial
         engine, so mixed sharded/unsharded sessions see one cache)."""

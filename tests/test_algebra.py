@@ -1,0 +1,387 @@
+"""Relational query algebra (engine/algebra.py, DESIGN.md §15): the
+normalize rewrites (double negation, De Morgan, flattening) must
+preserve boolean semantics exactly; the cost model's OR-ordering
+INVERSION (rank cost/sel — most selective branch LAST, because an OR
+branch short-circuits on TRUE) must match brute force over all
+permutations; the executor — optimized short-circuit lowering AND the
+unoptimized full-evaluation baseline, serial AND sharded, cold AND
+index-seeded — must return row sets bit-identical to the per-row naive
+oracle for RANDOM trees; the cross-corpus temporal hash join with
+window pushdown must emit pairs bit-identical to the nested loop; and
+the QuerySpec.where trained-system path plus index-aware joint costing
+must compose with all of it."""
+import dataclasses
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.costs import DecomposedCost
+from repro.data.synthetic import make_two_camera_corpus
+from repro.engine.algebra import (And, Join, Not, Or, PlanNode, Pred,
+                                  _chain_cost, _plan_join, execute_join,
+                                  execute_tree, naive_join_pairs,
+                                  naive_tree_rows, normalize,
+                                  order_children, plan_from_cascades,
+                                  temporal_hash_join)
+from repro.engine.ingest import CandidateIndex
+from repro.engine.scan import ScanEngine, naive_scan
+from repro.engine.sharded import ShardedScanEngine
+from test_query_engine import _toy_cascade, _uint8_images
+
+CONCEPTS = ("a", "b", "c")
+
+
+def _cascades():
+    """Toy cascades with DISTINCT planner annotations so ordering is
+    non-trivial: a is cheap/rare, b mid, c expensive/common."""
+    anno = {"a": (1e-4, 0.2), "b": (2e-4, 0.5), "c": (4e-4, 0.7)}
+    return {c: dataclasses.replace(_toy_cascade(c, i + 1),
+                                   cost_s=anno[c][0],
+                                   selectivity=anno[c][1])
+            for i, c in enumerate(CONCEPTS)}
+
+
+@pytest.fixture(scope="module")
+def setup():
+    """Corpus + cascades + the per-concept naive masks (computed ONCE:
+    the oracle for any tree is then pure mask algebra)."""
+    n, hw = 160, 32
+    images = _uint8_images(n, hw)
+    metadata = {"cam": np.arange(n) % 2,
+                "t": np.arange(n, dtype=np.int64) * 3}
+    cascades = _cascades()
+    fn_cache: dict = {}
+    masks = {}
+    for c, casc in cascades.items():
+        rows = naive_scan(images, [casc], chunk=64, _fn_cache=fn_cache)
+        m = np.zeros(n, bool)
+        m[rows] = True
+        masks[c] = m
+    return images, metadata, cascades, masks
+
+
+def _mask_eval(tree, masks, n):
+    if isinstance(tree, Pred):
+        return masks[tree.concept]
+    if isinstance(tree, Not):
+        return ~_mask_eval(tree.child, masks, n)
+    ms = [_mask_eval(c, masks, n) for c in tree.children]
+    out = np.ones(n, bool) if isinstance(tree, And) else np.zeros(n, bool)
+    for m in ms:
+        out = (out & m) if isinstance(tree, And) else (out | m)
+    return out
+
+
+def _random_tree(rng, depth=3):
+    kind = rng.integers(0, 4) if depth > 0 else 0
+    if kind == 0:
+        return Pred(str(rng.choice(list(CONCEPTS))))
+    if kind == 1:
+        return Not(_random_tree(rng, depth - 1))
+    kids = [_random_tree(rng, depth - 1)
+            for _ in range(int(rng.integers(2, 4)))]
+    return And(*kids) if kind == 2 else Or(*kids)
+
+
+# ------------------------------------------------------- normalize -------
+def _nnf_ok(t):
+    if isinstance(t, Pred):
+        return True
+    if isinstance(t, Not):
+        return isinstance(t.child, Pred)
+    if isinstance(t, (And, Or)):
+        if len(t.children) < 2:
+            return False
+        # flattened: no child shares the parent's operator
+        return all(not isinstance(c, type(t)) and _nnf_ok(c)
+                   for c in t.children)
+    return False
+
+
+def test_normalize_units():
+    a, b, c = Pred("a"), Pred("b"), Pred("c")
+    assert normalize(Not(Not(a))) == a
+    assert normalize(Not(And(a, b))) == Or(Not(a), Not(b))
+    assert normalize(Not(Or(a, b))) == And(Not(a), Not(b))
+    assert normalize(And(And(a, b), c)) == And(a, b, c)
+    assert normalize(And(a)) == a                 # single-child collapse
+    assert normalize(Not(And(a, Not(b)))) == Or(Not(a), b)
+    with pytest.raises((TypeError, ValueError)):
+        normalize(Join(a, b, delta_t=1.0))        # Join is root-only
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 10**9))
+def test_normalize_is_nnf_and_semantics_preserving(seed):
+    rng = np.random.default_rng(seed)
+    tree = _random_tree(rng, depth=4)
+    norm = normalize(tree)
+    assert _nnf_ok(norm)
+    assert normalize(norm) == norm                # idempotent
+    # identical truth table over random assignments
+    for _ in range(8):
+        masks = {c: rng.random(1) < 0.5 for c in CONCEPTS}
+        assert bool(_mask_eval(tree, masks, 1)[0]) == \
+            bool(_mask_eval(norm, masks, 1)[0])
+
+
+# -------------------------------------------------------- ordering -------
+def _leaf(sel, cost):
+    return PlanNode("pred", est_sel=sel, est_cost=cost)
+
+
+def test_order_children_matches_brute_force():
+    rng = np.random.default_rng(7)
+    for op in ("and", "or"):
+        for _ in range(25):
+            kids = [_leaf(float(rng.uniform(0.05, 0.95)),
+                          float(rng.uniform(0.1, 10.0)))
+                    for _ in range(int(rng.integers(2, 6)))]
+            best = min(_chain_cost(op, list(p))
+                       for p in itertools.permutations(kids))
+            got = _chain_cost(op, order_children(op, list(kids)))
+            assert got == pytest.approx(best)
+
+
+def test_or_rank_is_inverted():
+    """An OR branch short-circuits on TRUE, so the needle-in-haystack
+    branch (cheap but RARELY true) goes LAST — the exact opposite of
+    its AND position (DESIGN.md §15.2)."""
+    needle = _leaf(0.02, 1.0)    # rarely true
+    hay = _leaf(0.90, 1.0)       # almost always true
+    assert order_children("or", [needle, hay]) == [hay, needle]
+    assert order_children("and", [needle, hay]) == [needle, hay]
+    # greedy path (> exhaustive limit) ranks by cost/sel ascending
+    rng = np.random.default_rng(3)
+    kids = [_leaf(float(rng.uniform(0.05, 0.95)),
+                  float(rng.uniform(0.1, 10.0))) for _ in range(9)]
+    ranks = [k.est_cost / k.est_sel
+             for k in order_children("or", list(kids))]
+    assert ranks == sorted(ranks)
+
+
+# ----------------------------------------- differential oracle (tree) ----
+@pytest.mark.parametrize("seed", range(8))
+def test_random_trees_engine_matches_naive(seed, setup):
+    """The load-bearing property: for RANDOM trees, the optimized
+    short-circuit lowering and the unoptimized full-evaluation baseline
+    both return rows bit-identical to the per-concept mask oracle
+    (fixture-bound, so a plain seeded loop instead of @given — the
+    offline hypothesis shim can't mix fixtures with drawn args)."""
+    images, metadata, cascades, masks = setup
+    rng = np.random.default_rng(1000 + seed)
+    tree = _random_tree(rng, depth=3)
+    eq = {"cam": 0} if rng.random() < 0.5 else None
+    keep = (np.asarray(metadata["cam"]) == 0 if eq
+            else np.ones(len(images), bool))
+    ref = np.where(_mask_eval(tree, masks, len(images)) & keep)[0]
+    for optimize in (True, False):
+        eng = ScanEngine(images, metadata, chunk=64)
+        plan = plan_from_cascades(tree, cascades, metadata=metadata,
+                                  metadata_eq=eq, optimize=optimize)
+        res = execute_tree(eng, plan)
+        assert np.array_equal(res.indices, ref)
+
+
+def test_naive_tree_rows_agrees_with_mask_oracle(setup):
+    images, metadata, cascades, masks = setup
+    tree = And(Pred("a"), Not(And(Pred("b"), Not(Pred("c")))))
+    ref = np.where(_mask_eval(tree, masks, len(images))
+                   & (np.asarray(metadata["cam"]) == 0))[0]
+    got = naive_tree_rows(images, tree, cascades, metadata, {"cam": 0},
+                          chunk=64)
+    assert np.array_equal(got, ref)
+
+
+def test_contradiction_yields_empty(setup):
+    images, metadata, cascades, _ = setup
+    tree = And(Pred("a"), Not(Pred("a")), Pred("b"))
+    eng = ScanEngine(images, metadata, chunk=64)
+    res = execute_tree(eng, plan_from_cascades(tree, cascades,
+                                               metadata=metadata))
+    assert len(res.indices) == 0
+    assert len(naive_tree_rows(images, tree, cascades, metadata)) == 0
+
+
+def _sharded_case(setup, shards):
+    images, metadata, cascades, masks = setup
+    tree = Or(And(Pred("a"), Not(Pred("b"))), Pred("c"))
+    ref = np.where(_mask_eval(tree, masks, len(images))
+                   & (np.asarray(metadata["cam"]) == 0))[0]
+    eng = ShardedScanEngine(images, metadata, shards=shards, chunk=64)
+    plan = plan_from_cascades(tree, cascades, metadata=metadata,
+                              metadata_eq={"cam": 0})
+    assert np.array_equal(execute_tree(eng, plan).indices, ref)
+
+
+def test_sharded_one_shard_matches_naive(setup):
+    _sharded_case(setup, 1)
+
+
+@pytest.mark.multidevice
+def test_sharded_eight_shards_matches_naive(setup):
+    _sharded_case(setup, 8)
+
+
+# ------------------------------------------------------ index seeding ----
+def test_index_seeding_identical_rows_fewer_evaluations(setup):
+    images, metadata, cascades, masks = setup
+    n = len(images)
+    index = CandidateIndex(n, list(cascades.values()))
+    # ingest decided the label of 60% of rows for 'a' and 'b' — EXACT
+    # labels (what stage-0 both-threshold decisions guarantee)
+    rng = np.random.default_rng(11)
+    for c in ("a", "b"):
+        decided = np.where(rng.random(n) < 0.6)[0]
+        index.decided.record(cascades[c].key, decided,
+                             masks[c][decided].astype(np.int8))
+    tree = Or(And(Pred("a"), Pred("b")), Not(Pred("c")))
+    ref = np.where(_mask_eval(tree, masks, n))[0]
+    cold_eng = ScanEngine(images, metadata, chunk=64)
+    cold = execute_tree(cold_eng, plan_from_cascades(
+        tree, cascades, metadata=metadata))
+    seeded_eng = ScanEngine(images, metadata, chunk=64)
+    plan = plan_from_cascades(tree, cascades, metadata=metadata,
+                              index=index)
+    seeded = execute_tree(seeded_eng, plan)
+    assert np.array_equal(cold.indices, ref)
+    assert np.array_equal(seeded.indices, ref)
+    assert seeded.rows_evaluated < cold.rows_evaluated
+    assert "index" in plan.explain(n_rows=n).lower()
+
+
+def test_planning_stats_math():
+    cascades = _cascades()
+    key = cascades["a"].key
+    index = CandidateIndex(10, [cascades["a"]])
+    # 3 decided-0, 2 decided-1, 5 undecided
+    index.decided.record(key, np.arange(5),
+                         np.array([0, 0, 0, 1, 1], np.int8))
+    ef, sel = index.planning_stats(key, 0.4, prefilter=True)
+    assert ef == pytest.approx(5 / 7)             # und / (n - n0)
+    assert sel == pytest.approx((2 + 5 * 0.4) / 7)
+    ef, sel = index.planning_stats(key, 0.4, prefilter=False)
+    assert ef == pytest.approx(5 / 10)
+    assert sel == pytest.approx((2 + 5 * 0.4) / 10)
+    # unknown key: untouched estimates AND no column side-effect
+    ef, sel = index.planning_stats(("nope", ()), 0.4)
+    assert (ef, sel) == (1.0, 0.4)
+    assert ("nope", ()) not in set(index.decided.keys())
+
+
+def test_decomposed_cost_scaled():
+    dec = DecomposedCost(infer_s=2.0, rep_s={8: 0.5, 16: 1.5})
+    half = dec.scaled(0.5)
+    assert half.infer_s == pytest.approx(1.0)
+    assert half.rep_s == {8: pytest.approx(0.25), 16: pytest.approx(0.75)}
+    assert half.levels == dec.levels              # marginal pricing intact
+    assert half.total_s == pytest.approx(dec.total_s * 0.5)
+
+
+# ---------------------------------------------------------- joins --------
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10**9))
+def test_temporal_hash_join_matches_nested_loop(seed):
+    rng = np.random.default_rng(seed)
+    nl, nr = int(rng.integers(0, 12)), int(rng.integers(0, 12))
+    tl = rng.uniform(0, 40, 16)
+    tr = rng.uniform(0, 40, 16)
+    ids_l = rng.choice(16, nl, replace=False).astype(np.int64)
+    ids_r = rng.choice(16, nr, replace=False).astype(np.int64)
+    delta = float(rng.uniform(0.1, 6.0))
+    got = temporal_hash_join(ids_l, tl, ids_r, tr, delta)
+    ref = naive_join_pairs((ids_l, tl), (ids_r, tr), delta)
+    assert np.array_equal(got, ref)
+
+
+@pytest.fixture(scope="module")
+def join_setup(setup):
+    images, metadata, cascades, masks = setup
+    n = len(images)
+    images_b = _uint8_images(n, 32, seed=99)
+    meta_a = {"t": np.arange(n, dtype=np.int64) * 4}
+    meta_b = {"t": np.arange(n, dtype=np.int64) * 4 + 1}
+    fn_cache: dict = {}
+    masks_b = {}
+    for c, casc in cascades.items():
+        rows = naive_scan(images_b, [casc], chunk=64, _fn_cache=fn_cache)
+        m = np.zeros(n, bool)
+        m[rows] = True
+        masks_b[c] = m
+    return (images, meta_a, masks), (images_b, meta_b, masks_b), cascades
+
+
+def test_join_pushdown_bit_identical_to_naive(setup, join_setup):
+    (im_a, meta_a, masks_a), (im_b, meta_b, masks_b), cascades = join_setup
+    tree = Join(Pred("a"), Or(Pred("b"), Not(Pred("c"))), delta_t=3)
+    rows_l = np.where(_mask_eval(tree.left, masks_a, len(im_a)))[0]
+    rows_r = np.where(_mask_eval(tree.right, masks_b, len(im_b)))[0]
+    ref = naive_join_pairs((rows_l, meta_a["t"]), (rows_r, meta_b["t"]), 3)
+    assert len(ref)                               # non-degenerate case
+    for optimize in (True, False):
+        eng_a = ScanEngine(im_a, meta_a, chunk=64)
+        eng_b = ScanEngine(im_b, meta_b, chunk=64)
+        plan = plan_from_cascades(tree, cascades,
+                                  metadata=(meta_a, meta_b),
+                                  optimize=optimize)
+        res = execute_join((eng_a, eng_b), plan)
+        assert np.array_equal(res.pairs, ref)
+        if optimize:     # the window pushdown actually pruned probes
+            assert plan.window_kept is not None
+            assert plan.window_kept < len(im_b)
+            assert "JOIN" in plan.explain()
+    # pushdown is exact even when the build side comes up EMPTY
+    empty = Join(And(Pred("a"), Not(Pred("a"))), Pred("b"), delta_t=3)
+    eng_a = ScanEngine(im_a, meta_a, chunk=64)
+    eng_b = ScanEngine(im_b, meta_b, chunk=64)
+    plan = plan_from_cascades(empty, cascades, metadata=(meta_a, meta_b))
+    res = execute_join((eng_a, eng_b), plan)
+    assert res.pairs.shape == (0, 2)
+
+
+def test_join_build_side_is_the_cheap_side(join_setup):
+    (_, meta_a, _), (_, meta_b, _), cascades = join_setup
+    # left = expensive AND-of-everything, right = single cheap pred
+    tree = Join(And(Pred("b"), Pred("c")), Pred("a"), delta_t=2)
+    plan = plan_from_cascades(tree, cascades, metadata=(meta_a, meta_b))
+    assert plan.build_side == 1
+    unopt = plan_from_cascades(tree, cascades, metadata=(meta_a, meta_b),
+                               optimize=False)
+    assert unopt.build_side == 0                  # baseline keeps order
+
+
+def test_two_camera_generator_contract():
+    from repro.data.synthetic import DEFAULT_PREDICATES
+    specs = DEFAULT_PREDICATES[:2]
+    (xa, la, ta), (xb, lb, tb) = make_two_camera_corpus(
+        specs, 48, hw=16, seed=3, corr=0.7, dt_max=2)
+    assert xa.shape == (48, 16, 16, 3) and xb.shape == (48, 16, 16, 3)
+    assert la.shape == (48, 2) and lb.shape == (48, 2)
+    assert np.all(np.diff(ta) >= 0) and np.all(np.diff(tb) >= 0)
+    # frames are dyadic-quantized (bit-exact pyramids, DESIGN.md §3.1)
+    assert np.array_equal(xa, np.floor(xa * 256.0) / 256.0)
+    # the correlation is visible: a solid majority of B rows have an A
+    # partner within the window carrying the IDENTICAL label vector
+    partnered = sum(
+        any(abs(int(tb[j]) - int(ta[i])) <= 2 and
+            np.array_equal(lb[j], la[i]) for i in range(48))
+        for j in range(48))
+    assert partnered >= int(0.5 * 48)
+
+
+# --------------------------------------------------------- explain -------
+def test_explain_renders_annotated_tree(setup):
+    images, metadata, cascades, _ = setup
+    tree = And(Pred("a"), Or(Pred("b"), Not(Pred("c"))))
+    eng = ScanEngine(images, metadata, chunk=64)
+    plan = plan_from_cascades(tree, cascades, metadata=metadata,
+                              metadata_eq={"cam": 0})
+    txt = plan.explain(n_rows=len(images))
+    assert "ALGEBRA PLAN" in txt and "AND" in txt and "OR" in txt
+    assert "NOT contains(c)" in txt
+    assert "sel=" in txt and "cost/row" in txt and "└─" in txt
+    execute_tree(eng, plan)
+    after = plan.explain(n_rows=len(images))
+    assert "actual" in after                      # actuals filled in

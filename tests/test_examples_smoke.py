@@ -39,6 +39,16 @@ def test_query_engine_smoke():
     assert "adaptive:" in out
 
 
+def test_query_algebra_smoke():
+    out = _run_example("query_algebra.py", ["--tiny"])
+    assert "ALGEBRA PLAN" in out
+    assert "NOT contains(" in out
+    assert "identical rows across all three: True" in out
+    assert "actual" in out                        # est-vs-actual EXPLAIN
+    assert "JOIN" in out and "build side=" in out
+    assert "identical pairs (pushdown, baseline, nested loop): True" in out
+
+
 @pytest.mark.slow
 def test_serve_cascade_async_smoke():
     """Default path: the shard-aware AsyncCascadeService (DESIGN §10)."""

@@ -63,6 +63,55 @@ def test_detector_margin_separates_jitter_from_scene_changes(stream):
     assert diffs[~same].min() > 2 * pipe.skip_threshold     # changes above
 
 
+def test_autocalibrated_threshold_lands_in_the_margin(stream):
+    """skip_threshold=None LEARNS the per-camera threshold from the
+    warmup window: the learned value must land strictly between the
+    jitter and scene-change diff clusters (the same margin the pinned
+    default is tested for above), no frame may be skipped before
+    calibration completes, and the alias invariants survive."""
+    frames, _, scene, cascades, _ = stream
+    auto = IngestPipeline(cascades, len(frames), chunk=64, skip=True,
+                          skip_threshold=None)
+    assert auto.skip_threshold is None            # nothing learned yet
+    auto.run(frames)
+    thr = auto.skip_threshold
+    assert thr is not None
+    sigs = frame_signature(frames, auto.skip_res)
+    diffs = np.abs(sigs[1:] - sigs[:-1]).mean(axis=(1, 2))
+    same = scene[1:] == scene[:-1]
+    assert diffs[same].max() < thr < diffs[~same].min()
+    # calibration holds skipping off: every warmup frame is a reference
+    calib = auto.calib_frames
+    assert np.array_equal(auto.index.alias[:calib], np.arange(calib))
+    # skipping resumed afterwards, and aliases never cross a scene
+    assert auto.stats.skipped > 0
+    assert np.array_equal(scene[auto.index.alias], scene)
+
+
+def test_calibrate_threshold_unit():
+    lo = 1e-3 * np.linspace(0.5, 1.5, 20)         # jitter cluster
+    hi = 0.2 * np.linspace(0.8, 1.2, 6)           # scene changes
+    thr = IngestPipeline.calibrate_threshold(np.concatenate([hi, lo]))
+    assert lo.max() < thr < hi.min()
+    # the threshold is the geometric mean of the largest-gap endpoints
+    assert thr == pytest.approx(np.sqrt(lo.max() * hi.min()))
+    # non-positive diffs (chain starts) are ignored
+    assert IngestPipeline.calibrate_threshold(
+        np.concatenate([[0.0, 0.0], hi, lo])) == pytest.approx(thr)
+    # too few samples, or no clear multiplicative gap: pinned fallback
+    assert IngestPipeline.calibrate_threshold([1e-3] * 5) == 0.008
+    assert IngestPipeline.calibrate_threshold(
+        np.linspace(0.01, 0.02, 30)) == 0.008
+
+
+def test_ingest_factory_passes_calibration_knobs(stream):
+    frames, _, _, cascades, _ = stream
+    pipe = build_ingest_pipeline(cascades, len(frames), chunk=32,
+                                 skip_threshold=None, calib_frames=24)
+    assert pipe.skip_threshold is None
+    assert pipe.calib_frames == 24
+
+
 def test_streaming_granularity_invariant(stream):
     """Feeding the stream in ragged batches (the detector chains across
     ingest() calls) builds the identical index to one full run()."""

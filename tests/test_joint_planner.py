@@ -395,6 +395,50 @@ def test_joint_plan_rows_identical_across_engines(trained):
             res.indices)
 
 
+def test_joint_plan_index_aware_costing(trained):
+    """Candidate-index-aware joint planning (DESIGN.md §14.5): ingest
+    the query corpus with the joint plan's cascades, re-plan with the
+    index attached — every chosen pool entry must be priced against the
+    rows the index leaves for it (decomposed cost scaled by its own
+    eval_frac, level set untouched so marginal sharing still composes),
+    and exact-mode execution stays bit-identical to a cold naive scan
+    of the same plan."""
+    from repro.engine.ingest import IngestPipeline, indexed_execute
+    from repro.engine.planner import PredicateClause, QuerySpec
+
+    specs, systems, qx, metadata = trained
+    _, joint = _plan_pair(trained)
+    pipe = IngestPipeline(joint.cascades, len(qx), chunk=48, skip=False)
+    pipe.run(qx)
+    idx = pipe.index
+    # stage-0 both-threshold exits decided rows during ingest
+    assert any(idx.planning_stats(c.key, 0.5)[0] < 1.0
+               for c in joint.cascades)
+    spec_q = QuerySpec(
+        metadata_eq={"cam": 0},
+        predicates=[PredicateClause(s.name, min_accuracy=0.6)
+                    for s in specs])
+    joint_idx = plan_query(systems, spec_q, scenario="CAMERA",
+                           metadata=metadata, joint=True, index=idx)
+    assert joint_idx.joint and joint_idx.index is idx
+    scaled = 0
+    for p in joint_idx.predicates:
+        ef, _ = idx.planning_stats(p.cascade.key, 0.5, prefilter=True)
+        system = systems[p.cascade.concept]
+        raw = system.decomposed_cost(system.cascade_space("CAMERA"),
+                                     p.selection.index, "CAMERA",
+                                     dense_levels=True)
+        assert p.decomposed.infer_s == pytest.approx(raw.infer_s * ef)
+        assert p.decomposed.levels == raw.levels
+        scaled += ef < 1.0
+    assert scaled                  # the index actually discounted a pick
+    eng = ScanEngine(qx, metadata, chunk=48)
+    res = indexed_execute(eng, joint_idx)
+    ref = naive_scan(qx, joint_idx.cascades, metadata,
+                     joint_idx.metadata_eq, chunk=48)
+    assert np.array_equal(res.indices, ref)
+
+
 @pytest.mark.multidevice
 @pytest.mark.parametrize("shards", [1, 8])
 def test_joint_plan_rows_identical_sharded(trained, shards):

@@ -138,6 +138,21 @@ def test_readme_figures_overload():
     assert ov["subsat_identical"]
 
 
+def test_readme_figures_algebra():
+    al = _bench("BENCH_algebra.json")
+    row = _row("Query algebra")
+    assert al["tree"]["speedup_vs_unoptimized_x"] == pytest.approx(
+        _fig(row, r"(\d+\.\d+)x vs the same tree unoptimized"), rel=0.01)
+    assert al["tree"]["speedup_vs_naive_x"] == pytest.approx(
+        _fig(row, r"(\d+\.\d+)x vs naive"), rel=0.01)
+    assert al["join"]["speedup_pushdown_x"] == pytest.approx(
+        _fig(row, r"pushdown (\d+\.\d+)x"), rel=0.01)
+    assert al["tree"]["rows_identical"] and al["join"]["pairs_identical"]
+    # the acceptance floor the PR ships under: the rewrites must WIN
+    assert al["tree"]["speedup_vs_unoptimized_x"] > 1.0
+    assert al["join"]["speedup_pushdown_x"] > 1.0
+
+
 def test_readme_figures_ingest():
     ig = _bench("BENCH_ingest.json")
     row = _row("Ingest-time indexing")
